@@ -1,0 +1,54 @@
+"""Paper Table 7: behavior-aggregation with vs without local gradient
+accumulation (flush_every=m vs flush_every=1), time + recall."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, bench_dataset, emit, rand_batch, time_fn
+from repro.core import mf
+from repro.core.metrics import evaluate_ranking
+from repro.data import pipeline
+
+
+def _setup(flush_every):
+    cfg = bench_cfg(500, 1000, emb_dim=32, num_negatives=16, lr=0.1,
+                    history_len=16, flush_every=flush_every)
+    ds = bench_dataset(500, 1000)
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg))
+    return cfg, ds, state, step
+
+
+def _train_recall(cfg, ds, state, step, steps=500):
+    rng = jax.random.PRNGKey(1)
+    for i in range(steps):
+        batch = pipeline.cf_batch(ds, i, 128, cfg.history_len)
+        state, _ = step(state, batch, jax.random.fold_in(rng, i))
+    scores = mf.scores_all_items(state.params, jnp.arange(cfg.num_users))
+    m = evaluate_ranking(scores, jnp.asarray(ds.train_mask()),
+                         jnp.asarray(ds.test_mask()))
+    return float(m["recall@20"])
+
+
+def run():
+    results = {}
+    for m_flush, tag in ((32, "with_accum(m=32)"), (1, "without_accum(m=1)")):
+        cfg, ds, state, step = _setup(m_flush)
+        # timing at paper-scale tables
+        tcfg = bench_cfg(history_len=100, flush_every=m_flush)
+        tstate = mf.init_mf(jax.random.PRNGKey(0), tcfg)
+        import functools as _ft
+        tstep = jax.jit(_ft.partial(mf.heat_train_step, cfg=tcfg))
+        tbatch = rand_batch(tcfg, 1024)
+        t = time_fn(lambda: tstep(tstate, tbatch, jax.random.PRNGKey(2)), iters=8)
+        r = _train_recall(cfg, ds, state, step)
+        results[tag] = (t, r)
+        emit(f"table7/{tag}", t, f"recall@20={r:.4f}")
+    t_w, _ = results["with_accum(m=32)"]
+    t_wo, _ = results["without_accum(m=1)"]
+    emit("table7/accum_speedup", 0.0, f"{t_wo / t_w:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

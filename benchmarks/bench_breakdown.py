@@ -1,0 +1,56 @@
+"""Paper Tables 2 & 4 / Fig. 8: forward-phase breakdown.
+
+Times each phase of one training iteration separately (jitted in isolation):
+embedding reads (u_emb / i_emb), similarity+norm compute, loss, backward,
+update — and reports each as a percentage of their sum, mirroring the
+paper's profiling methodology (§3.2 / §5.2).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
+from repro.core import mf, samplers
+from repro.core.losses import ccl_loss_fused
+from repro.core.similarity import cosine_similarity, simplex_bmm_similarity
+
+
+def run():
+    cfg = bench_cfg()
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    batch = rand_batch(cfg, 1024)
+    rng = jax.random.PRNGKey(1)
+
+    params = state.params
+    neg_ids = samplers.sample_uniform(rng, cfg.num_items,
+                                      (1024, cfg.num_negatives))
+
+    u_read = jax.jit(lambda t, i: t[i])
+    t_u = time_fn(u_read, params.user_table, batch.user_ids)
+    t_p = time_fn(u_read, params.item_table, batch.pos_ids)
+    t_n = time_fn(u_read, params.item_table, neg_ids)
+
+    user_e = params.user_table[batch.user_ids]
+    pos_e = params.item_table[batch.pos_ids]
+    neg_e = params.item_table[neg_ids]
+
+    t_sim = time_fn(jax.jit(cosine_similarity), user_e, pos_e, neg_e)
+    t_sim_bmm = time_fn(jax.jit(simplex_bmm_similarity), user_e, pos_e, neg_e)
+    t_loss = time_fn(jax.jit(lambda u, p, n: ccl_loss_fused(u, p, n)),
+                     user_e, pos_e, neg_e)
+    t_bwd = time_fn(jax.jit(jax.grad(lambda u, p, n: ccl_loss_fused(u, p, n),
+                                     argnums=(0, 1, 2))), user_e, pos_e, neg_e)
+    upd = jax.jit(lambda t, i, g: t.at[i].add(-0.05 * g))
+    g = jnp.ones_like(user_e)
+    t_upd = time_fn(upd, params.user_table, batch.user_ids, g)
+
+    total = t_u + t_p + t_n + t_sim + t_loss + t_bwd + t_upd
+    for name, t in [("u_emb", t_u), ("pos_emb", t_p), ("neg_emb", t_n),
+                    ("similarity", t_sim), ("loss", t_loss),
+                    ("backward", t_bwd), ("update", t_upd)]:
+        emit(f"table4/{name}", t, f"{100 * t / total:.1f}%")
+    emit("table2/bmm_similarity_baseline", t_sim_bmm,
+         f"fused_speedup={t_sim_bmm / t_sim:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Fig. 6 / Fig. 13: epoch time, HEAT vs SimpleX-style baselines.
+
+Batch 256 (so the touched-row fraction stays far below the table size and
+the sparse-vs-dense update contrast is visible; with batch*negatives ~ table
+rows both paths touch everything and converge, which we verified).
+
+Baselines mapped from the paper's comparison set:
+  T-MF-CCL  -> concat+normalize+bmm similarity, autodiff, dense full-table
+               update (the profiled torch path, §3.1/§3.2)
+  T-S       -> same + behavior aggregation layer
+  H-CCL     -> HEAT: fused similarity + residual-reuse VJP + sparse rows
+  H-ACCL    -> HEAT + aggregation (deferred m-step flush)
+Derived column reports the speedup over the matching baseline.
+"""
+import functools
+
+import jax
+
+from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
+from repro.core import mf
+
+
+def _step(cfg, loss_impl, sparse):
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg,
+                                     loss_impl=loss_impl, sparse_update=sparse))
+    batch = rand_batch(cfg, 256)
+    rng = jax.random.PRNGKey(1)
+    return lambda: step(state, batch, rng)
+
+
+def run():
+    cfg = bench_cfg()
+    acfg = bench_cfg(history_len=32, flush_every=32)
+
+    t_baseline = time_fn(_step(cfg, "simplex_bmm", sparse=False), iters=10)
+    t_heat = time_fn(_step(cfg, "fused", sparse=True), iters=10)
+    emit("fig6/T-MF-CCL(bmm+dense)", t_baseline)
+    emit("fig6/H-CCL(fused+sparse)", t_heat,
+         f"speedup={t_baseline / t_heat:.2f}x")
+
+    ta_baseline = time_fn(_step(acfg, "simplex_bmm", sparse=False), iters=10)
+    ta_heat = time_fn(_step(acfg, "fused", sparse=True), iters=10)
+    emit("fig6/T-S(aggr+bmm+dense)", ta_baseline)
+    emit("fig6/H-ACCL(aggr+fused+sparse)", ta_heat,
+         f"speedup={ta_baseline / ta_heat:.2f}x")
+
+    # §4.4 isolation: identical pipeline, only the backward differs
+    # (cached-residual analytic VJP vs operator-level autodiff).
+    t_autodiff = time_fn(_step(cfg, "autodiff", sparse=True), iters=10)
+    emit("sec4.4/H-CCL-autodiff-bwd", t_autodiff,
+         f"reuse_speedup={t_autodiff / t_heat:.2f}x")
+
+    # §3.1 isolation: identical math, dense full-table vs sparse row update.
+    t_dense_upd = time_fn(_step(cfg, "fused", sparse=False), iters=10)
+    emit("sec3.1/H-CCL-dense-update", t_dense_upd,
+         f"sparse_speedup={t_dense_upd / t_heat:.2f}x")
+
+    # CuMF_SGD-comparable setting: dot similarity, MSE, 1 negative (Fig. 7)
+    c1 = bench_cfg(num_negatives=1, similarity="dot")
+    t_mse = time_fn(_step(c1, "mse_dot", sparse=True), iters=10)
+    emit("fig7/H-dot-mse-1neg", t_mse)
+
+
+if __name__ == "__main__":
+    run()

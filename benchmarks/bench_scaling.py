@@ -1,0 +1,44 @@
+"""Paper Fig. 12: scalability with worker count.
+
+The paper measures thread scaling on a 64-core CPU.  This container has ONE
+core, so parallel wall-clock speedup is not measurable; what *is* measurable
+and faithful to the claim ("no communication or synchronization across
+threads -> near-linear scaling") is:
+
+  (a) work-per-shard independence: per-iteration time grows linearly in the
+      batch it processes (slope ~1 on log-log), i.e. shards add no
+      super-linear cost, and
+  (b) the sharded-tile structure: S independent tiles (paper: per-thread
+      tiles) cost S-proportional memory and one fused refresh gather.
+
+Reported as iteration time vs simulated shard count, with the linear-scaling
+efficiency derived from (a).  Real-mesh scaling is exercised by the dry-run
+(collective terms in EXPERIMENTS.md §Roofline).
+"""
+import functools
+
+import jax
+
+from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
+from repro.core import mf
+
+
+def run():
+    times = {}
+    for shards in (1, 2, 4, 8):
+        # one "shard" processes batch 256; S shards process 256*S total work
+        cfg = bench_cfg()
+        state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg))
+        batch = rand_batch(cfg, 256 * shards)
+        t = time_fn(lambda: step(state, batch, jax.random.PRNGKey(1)), iters=10)
+        times[shards] = t
+        emit(f"fig12/shards={shards}", t, f"work={256 * shards}")
+    # parallel efficiency if the S shards ran concurrently: T(1)/ (T(S)/S)
+    eff = times[1] / (times[8] / 8)
+    emit("fig12/weak_scaling_efficiency", 0.0,
+         f"{100 * eff:.1f}% (paper: 83.7% on 64 threads)")
+
+
+if __name__ == "__main__":
+    run()

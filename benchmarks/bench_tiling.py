@@ -1,0 +1,79 @@
+"""Paper Figs. 10-11 + Table 6: tiling size / refresh interval sweeps.
+
+Measures (a) per-iteration speedup of the tiled sampler over the uniform
+sampler at paper-scale tables (60k items) and (b) Recall@20 after a short
+training run at a small learnable scale, across tile sizes and refresh
+intervals; then reports Algorithm 1's tuned plan.  Mirrors §5.5.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, bench_dataset, emit, rand_batch, time_fn
+from repro.core import mf
+from repro.core.metrics import evaluate_ranking
+from repro.core.tiling import tune_tiling
+from repro.data import pipeline
+
+ACC_USERS, ACC_ITEMS = 500, 1000
+
+
+def _train(cfg, ds, steps=500):
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg))
+    rng = jax.random.PRNGKey(1)
+    for i in range(steps):
+        batch = pipeline.cf_batch(ds, i, 128, cfg.history_len)
+        state, _ = step(state, batch, jax.random.fold_in(rng, i))
+    return state
+
+
+def _recall(state, cfg, ds):
+    scores = mf.scores_all_items(state.params, jnp.arange(cfg.num_users))
+    m = evaluate_ranking(scores, jnp.asarray(ds.train_mask()),
+                         jnp.asarray(ds.test_mask()))
+    return float(m["recall@20"])
+
+
+def _iter_time(cfg):
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg))
+    batch = rand_batch(cfg, 1024)
+    rng = jax.random.PRNGKey(2)
+    return time_fn(lambda: step(state, batch, rng), iters=10)
+
+
+def run():
+    # --- timing sweep (60k-item tables, batch 1024) ---
+    t_random = _iter_time(bench_cfg())
+    emit("fig10/random_sampler", t_random)
+    for tile in (256, 1024, 4096):
+        t = _iter_time(bench_cfg(tile_size=tile, refresh_interval=1024))
+        emit(f"fig10/tile={tile}", t, f"speedup={t_random / t:.2f}x")
+    for interval in (64, 1024, 8192):
+        t = _iter_time(bench_cfg(tile_size=1024, refresh_interval=interval))
+        emit(f"fig11/interval={interval}", t, f"speedup={t_random / t:.2f}x")
+
+    # --- accuracy sweep (small learnable dataset) ---
+    ds = bench_dataset(ACC_USERS, ACC_ITEMS)
+    acc = dict(emb_dim=32, num_negatives=16, lr=0.1)
+    r_rand = _recall(_train(bench_cfg(ACC_USERS, ACC_ITEMS, **acc), ds),
+                     bench_cfg(ACC_USERS, ACC_ITEMS, **acc), ds)
+    emit("fig10/random_recall", 0.0, f"recall@20={r_rand:.4f}")
+    for tile, interval in ((64, 512), (256, 64), (256, 512)):
+        cfg = bench_cfg(ACC_USERS, ACC_ITEMS, tile_size=tile,
+                        refresh_interval=interval, **acc)
+        r = _recall(_train(cfg, ds), cfg, ds)
+        emit(f"table6/tile={tile},interval={interval}", 0.0,
+             f"recall@20={r:.4f} drecall={r - r_rand:+.4f}")
+
+    plan = tune_tiling(num_items=60000, total_iterations=1_000_000,
+                       num_negatives=64, emb_dim=128, model_shards=16)
+    emit("table6/algorithm1_plan", 0.0,
+         f"N1={plan.tile_size} N2={plan.refresh_interval} "
+         f"pred_speedup={plan.predicted_speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Shared benchmark helpers: timing, dataset/config factories, CSV output.
+
+All paper-table benchmarks run on the single real CPU device at reduced scale
+(documented per-benchmark); the paper's *claims* are about ratios (speedups),
+which survive scaling, not absolute epoch seconds.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mf import MFConfig
+from repro.data import pipeline
+
+ROWS: list[dict] = []
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (us) of a jitted callable; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def bench_dataset(users: int = 3000, items: int = 6000, seed: int = 0):
+    return pipeline.synth_cf_dataset(users, items, interactions_per_user=16,
+                                     num_clusters=16, seed=seed)
+
+
+def bench_cfg(users: int = 30000, items: int = 60000, **kw) -> MFConfig:
+    """Timing-bench scale: tables big enough that dense-vs-sparse updates and
+    tile-vs-table gathers are contrasted (paper datasets are 30k-90k items)."""
+    base = dict(num_users=users, num_items=items, emb_dim=128,
+                num_negatives=64, lr=0.05)
+    base.update(kw)
+    return MFConfig(**base)
+
+
+def rand_batch(cfg: MFConfig, batch: int = 1024, seed: int = 0):
+    """Random-id batch for timing benches (no dataset generation needed)."""
+    r = np.random.default_rng(seed)
+    hist = cfg.history_len
+    return pipeline.Batch(
+        user_ids=jnp.asarray(r.integers(0, cfg.num_users, batch), jnp.int32),
+        pos_ids=jnp.asarray(r.integers(0, cfg.num_items, batch), jnp.int32),
+        hist_ids=(jnp.asarray(r.integers(0, cfg.num_items, (batch, hist)),
+                              jnp.int32) if hist else None),
+        hist_mask=jnp.ones((batch, hist)) if hist else None)

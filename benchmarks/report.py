@@ -1,0 +1,91 @@
+"""Generate the §Dry-run / §Roofline / §Perf markdown tables for
+EXPERIMENTS.md from the JSON artifacts under experiments/.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/tables.md
+"""
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(path="experiments/dryrun_full.json"):
+    with open(path) as f:
+        recs = json.load(f)
+    print("\n### Dry-run: all (arch x shape x mesh) cells\n")
+    print("| arch | shape | mesh | status | compile_s | HLO flops/dev |"
+          " HLO bytes/dev | collective B/dev | arg bytes/dev | temp bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | - | skip: "
+                  f"{r['reason'][:60]}… | | | | | | |")
+            continue
+        if r["status"] == "fail":
+            print(f"| {r['arch']} | {r['shape']} | {r.get('mesh_name')} |"
+                  f" FAIL {r['error'][:60]} | | | | | | |")
+            continue
+        coll = sum(r["collective_bytes"].values())
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh_name']} | ok |"
+              f" {r['compile_s']} | {r['flops']:.2e} | {r['bytes_accessed']:.2e} |"
+              f" {fmt_bytes(coll)} | {fmt_bytes(mem.get('argument_bytes'))} |"
+              f" {fmt_bytes(mem.get('temp_bytes'))} |")
+
+
+def roofline_table(path="experiments/roofline_baseline.json"):
+    with open(path) as f:
+        recs = json.load(f)
+    print("\n### Roofline: per-cell terms (single-pod 16x16, per device)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant |"
+          " MODEL_FLOPS/dev | useful ratio | roofline fraction |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | skip/fail |"
+                  f" {r.get('reason', r.get('error', ''))[:70]} | | | | | |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} |"
+              f" {r['memory_s']:.2e} | {r['collective_s']:.2e} |"
+              f" **{r['dominant']}** | {r['model_flops']:.2e} |"
+              f" {r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |")
+
+
+def perf_table(pattern="experiments/perf/*.json"):
+    print("\n### Perf iterations (hillclimb variants)\n")
+    print("| variant | arch | shape | compute_s | memory_s | collective_s |"
+          " dominant | roofline fraction |")
+    print("|---|---|---|---|---|---|---|---|")
+    for path in sorted(glob.glob(pattern)):
+        name = os.path.basename(path).replace(".json", "")
+        with open(path) as f:
+            recs = json.load(f)
+        for r in recs:
+            if r.get("status") != "ok":
+                continue
+            print(f"| {name} | {r['arch']} | {r['shape']} |"
+                  f" {r['compute_s']:.2e} | {r['memory_s']:.2e} |"
+                  f" {r['collective_s']:.2e} | {r['dominant']} |"
+                  f" {r['roofline_fraction']:.4f} |")
+
+
+def main():
+    if os.path.exists("experiments/dryrun_full.json"):
+        dryrun_table()
+    if os.path.exists("experiments/roofline_baseline.json"):
+        roofline_table()
+    if glob.glob("experiments/perf/*.json"):
+        perf_table()
+
+
+if __name__ == "__main__":
+    main()

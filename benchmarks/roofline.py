@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (deliverable (g), DESIGN.md §6).
+
+For each (arch x shape) cell on the single-pod 16x16 mesh, derive the three
+roofline terms from the compiled dry-run artifact:
+
+    compute_s    = HLO_FLOPs_per_device / 197e12            (bf16 peak)
+    memory_s     = HLO_bytes_per_device / 819e9              (HBM bw)
+    collective_s = sum_k mult_k * collective_bytes_k / 50e9  (ICI per link)
+
+cost_analysis counts ``lax.scan`` bodies once, so each cell is compiled at
+L = u and L = 2u layers (u = layers per scan group) and extrapolated
+affinely: cost(G groups) = cost(u) + (G-1) * (cost(2u) - cost(u)) — exact
+for layer-homogeneous stacks (all ten archs scan homogeneous groups).
+
+Collective multipliers (ring algorithms, result-shape accounting of the
+post-SPMD per-device HLO): all-reduce 2x, others 1x.
+
+MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) with N_active
+the non-embedding per-token-active parameter count; the ratio
+MODEL_FLOPS/HLO_FLOPS exposes remat/dispatch/head overheads.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline                      # all cells
+  PYTHONPATH=src python -m benchmarks.roofline --arch granite-8b --shape train_4k \
+      --loss softmax --remat none --attn-chunk 2048                 # perf knob run
+Writes experiments/roofline.json (or --out) and prints the table.
+"""
+import argparse
+import json
+import math
+import sys
+
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_COLL_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def active_params(cfg) -> int:
+    """Non-embedding params active per token (MoE experts scaled by k/E)."""
+    import jax
+    from repro.models import lm
+    from repro.models.params import is_def
+
+    defs = lm.model_defs(cfg)
+    total = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if keys and keys[0] in ("embed", "out_embed"):
+            continue
+        n = math.prod(leaf.shape)
+        if "moe" in keys:
+            n = n * cfg.moe_top_k // max(cfg.moe_experts, 1)
+        total += n
+    return total
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_devices
+    return 2.0 * n * shape.global_batch / n_devices       # decode: 1 new token
+
+
+def extrapolate(rec1: dict, rec2: dict, groups: int) -> dict:
+    """cost(G) = cost(1 group) + (G-1) * (cost(2) - cost(1))."""
+    out = {}
+    for key in ("flops", "bytes_accessed"):
+        a, b = rec1[key] or 0.0, rec2[key] or 0.0
+        out[key] = a + (groups - 1) * (b - a)
+    coll = {}
+    for k in rec1["collective_bytes"]:
+        a = rec1["collective_bytes"][k]
+        b = rec2["collective_bytes"][k]
+        coll[k] = a + (groups - 1) * (b - a)
+    out["collective_bytes"] = coll
+    return out
+
+
+def terms(cost: dict) -> dict:
+    compute_s = cost["flops"] / PEAK_FLOPS
+    memory_s = cost["bytes_accessed"] / HBM_BW
+    coll_s = sum(_COLL_MULT[k] * v for k, v in cost["collective_bytes"].items()) / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant[0],
+            "step_s": dominant[1]}
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, opts=None,
+                 overrides=None) -> dict:
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+    from repro.models.config import SHAPES
+    from repro.models.lm import TrainOptions, num_groups
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    u = cfg.n_layers // num_groups(cfg)
+    groups = num_groups(cfg)
+
+    # Fully unrolled layer stacks for the two extrapolation compiles: the HLO
+    # then contains each layer explicitly, so cost(L) = base + L*delta exactly.
+    opts_u = dataclasses.replace(opts or TrainOptions(), scan_unroll=True)
+    rec1, c1 = lower_cell(arch, shape_name, mesh, layers=u, opts=opts_u,
+                          overrides=overrides)
+    del c1
+    rec2, c2 = lower_cell(arch, shape_name, mesh, layers=2 * u, opts=opts_u,
+                          overrides=overrides)
+    del c2
+    cost = extrapolate(rec1, rec2, groups)
+    t = terms(cost)
+    n_dev = math.prod(mesh.devices.shape)
+    mf = model_flops(cfg, shape, n_dev)
+    t.update({
+        "arch": arch, "shape": shape_name, "groups": groups,
+        "hlo_flops": cost["flops"], "hlo_bytes": cost["bytes_accessed"],
+        "collective_bytes": cost["collective_bytes"],
+        "model_flops": mf,
+        "useful_ratio": mf / cost["flops"] if cost["flops"] else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / t["step_s"] if t["step_s"] else 0.0,
+    })
+    return t
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--loss", default=None, choices=[None, "heat", "softmax"])
+    p.add_argument("--remat", default=None, choices=[None, "full", "none"])
+    p.add_argument("--attn-chunk", type=int, default=None)
+    p.add_argument("--probs-dtype", default=None, choices=[None, "f32", "bf16"])
+    p.add_argument("--attn-dtype", default=None, choices=[None, "f32", "bf16"])
+    p.add_argument("--override", action="append", default=[],
+                   help="ArchConfig field, e.g. attn_tp=false, heat.num_negatives handled as heat_negatives")
+    p.add_argument("--out", default="experiments/roofline.json")
+    args = p.parse_args()
+
+    from repro.configs import ARCH_NAMES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import lm
+    from repro.models.config import SHAPES
+
+    opts = None
+    if args.loss or args.remat or args.attn_chunk or args.probs_dtype \
+            or args.attn_dtype:
+        kw = {}
+        if args.loss:
+            kw["loss"] = args.loss
+        if args.remat:
+            kw["remat"] = args.remat
+        if args.attn_chunk:
+            kw["attn_chunk"] = args.attn_chunk
+        if args.probs_dtype:
+            kw["probs_dtype"] = jnp.bfloat16 if args.probs_dtype == "bf16" else jnp.float32
+        if args.attn_dtype:
+            kw["attn_acc_dtype"] = jnp.bfloat16 if args.attn_dtype == "bf16" else jnp.float32
+        opts = lm.TrainOptions(**kw)
+
+    overrides = {}
+    for ov in args.override:
+        key, _, val = ov.partition("=")
+        lowered = val.lower()
+        if lowered in ("true", "false"):
+            overrides[key] = lowered == "true"
+        elif val.isdigit():
+            overrides[key] = int(val)
+        else:
+            try:
+                overrides[key] = float(val)
+            except ValueError:
+                overrides[key] = val
+
+    mesh = make_production_mesh(multi_pod=False)
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    results = []
+    hdr = (f"{'arch':28s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dom':>10s} {'useful':>7s} {'roofline':>9s}")
+    print(hdr)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            reason = cfg.skip_reason(shape_name)
+            if reason:
+                results.append({"arch": arch, "shape": shape_name,
+                                "status": "skip", "reason": reason})
+                print(f"{arch:28s} {shape_name:12s} {'skip: ' + reason}")
+                continue
+            try:
+                t = analyze_cell(arch, shape_name, mesh, opts=opts,
+                                 overrides=overrides or None)
+                t["status"] = "ok"
+                if opts:
+                    t["opts"] = {"loss": opts.loss, "remat": opts.remat,
+                                 "attn_chunk": opts.attn_chunk,
+                                 "probs_dtype": str(opts.probs_dtype)}
+                if overrides:
+                    t["overrides"] = {k: str(v) for k, v in overrides.items()}
+                results.append(t)
+                print(f"{arch:28s} {shape_name:12s} {t['compute_s']:10.2e} "
+                      f"{t['memory_s']:10.2e} {t['collective_s']:10.2e} "
+                      f"{t['dominant']:>10s} {t['useful_ratio']:7.3f} "
+                      f"{t['roofline_fraction']:9.4f}")
+            except Exception as e:  # noqa: BLE001
+                results.append({"arch": arch, "shape": shape_name,
+                                "status": "fail",
+                                "error": f"{type(e).__name__}: {e}"})
+                print(f"{arch:28s} {shape_name:12s} FAIL {type(e).__name__}: {e}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Paper-table benchmarks run on the single CPU device at reduced scale; the
+compile-heavy roofline/dry-run artifacts live in separate entrypoints
+(``repro.launch.dryrun`` / ``benchmarks.roofline``) because they force a
+512-device host platform.  If their JSON outputs exist under experiments/,
+a summary is appended here.
+"""
+import json
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_aggregation, bench_breakdown,
+                            bench_epoch_time, bench_memory, bench_scaling,
+                            bench_tiling)
+    print("name,us_per_call,derived")
+    suites = [
+        ("epoch_time(fig6/7)", bench_epoch_time.run),
+        ("breakdown(tab2/4,fig8)", bench_breakdown.run),
+        ("tiling(fig10/11,tab6)", bench_tiling.run),
+        ("aggregation(tab7)", bench_aggregation.run),
+        ("accuracy(tab5)", bench_accuracy.run),
+        ("scaling(fig12)", bench_scaling.run),
+        ("memory(tab3)", bench_memory.run),
+    ]
+    failures = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+    for tag, path in (("dryrun", "experiments/dryrun_full.json"),
+                      ("roofline", "experiments/roofline_baseline.json")):
+        if os.path.exists(path):
+            with open(path) as f:
+                recs = json.load(f)
+            ok = sum(1 for r in recs if r.get("status") == "ok")
+            skip = sum(1 for r in recs if r.get("status") == "skip")
+            fail = sum(1 for r in recs if r.get("status") == "fail")
+            print(f"{tag}/summary,0.0,ok={ok} skip={skip} fail={fail}")
+    if failures:
+        sys.exit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Fault-tolerance demo: a simulated node failure mid-run, automatic restore
+from the latest atomic checkpoint, and bit-exact convergence with the
+uninterrupted run (restart-pure data pipeline).
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.train import trainer
+
+CKPT_A, CKPT_B = "/tmp/heat_ft_clean", "/tmp/heat_ft_crash"
+
+
+def main():
+    for d in (CKPT_A, CKPT_B):
+        shutil.rmtree(d, ignore_errors=True)
+    cfg = get_config("smollm-360m").reduced()
+    opts = lm.TrainOptions(loss="heat", remat="none", attn_chunk=8)
+    base = dict(steps=20, lr=1e-2, batch_size=4, seq_len=32, log_every=5,
+                ckpt_every=5)
+
+    print("--- clean run (no failures) ---")
+    clean, _ = trainer.train_lm(cfg, opts, trainer.TrainerConfig(
+        ckpt_dir=CKPT_A, **base))
+
+    print("--- faulty run (injected node failure at step 13) ---")
+    crashed, _ = trainer.train_lm(cfg, opts, trainer.TrainerConfig(
+        ckpt_dir=CKPT_B, fail_at_step=13, **base))
+
+    diffs = [float(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32)).max())
+             for a, b in zip(jax.tree.leaves(clean.params),
+                             jax.tree.leaves(crashed.params))]
+    print(f"max param divergence after restart: {max(diffs):.2e} "
+          f"({'BIT-EXACT' if max(diffs) < 1e-6 else 'DIVERGED'})")
+    print("elastic note: checkpoints store full logical arrays; restore() "
+          "re-lays them out on whatever mesh the restarted job brings up "
+          "(see tests/test_checkpoint.py::test_elastic_restore_with_sharding).")
+
+
+if __name__ == "__main__":
+    main()

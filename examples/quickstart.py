@@ -1,0 +1,44 @@
+"""Quickstart: train HEAT (MF + CCL + random tiling) on a synthetic implicit-
+feedback dataset and evaluate Recall@20 / NDCG@20.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import evaluate_ranking
+from repro.core.mf import MFConfig, scores_all_items
+from repro.core.tiling import tune_tiling
+from repro.data import pipeline
+from repro.train import trainer
+
+
+def main():
+    users, items = 1000, 2000
+    ds = pipeline.synth_cf_dataset(users, items, interactions_per_user=24,
+                                   num_clusters=16, seed=0)
+
+    # Algorithm 1 picks the tile size / refresh interval for us.
+    plan = tune_tiling(num_items=items, total_iterations=1500, num_negatives=32,
+                       emb_dim=64, model_shards=1)
+    print(f"tiling plan: N1={plan.tile_size} N2={plan.refresh_interval} "
+          f"(predicted negative-read speedup {plan.predicted_speedup:.2f}x)")
+
+    cfg = MFConfig(num_users=users, num_items=items, emb_dim=32,
+                   num_negatives=32, lr=0.2, history_len=8, flush_every=32,
+                   tile_size=plan.tile_size,
+                   refresh_interval=plan.refresh_interval)
+
+    state, losses = trainer.train_mf(cfg, ds, steps=1500, batch_size=256)
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+    scores = scores_all_items(state.params, jnp.arange(users))
+    m = evaluate_ranking(scores, jnp.asarray(ds.train_mask()),
+                         jnp.asarray(ds.test_mask()), k=20)
+    print(f"Recall@20={float(m['recall@20']):.4f}  "
+          f"NDCG@20={float(m['ndcg@20']):.4f}  "
+          f"(random baseline ~{20 / items:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` accepts the assignment ids (hyphenated) or module names.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_MODULES = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "mamba2-370m": "mamba2_370m",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "minitron-4b": "minitron_4b",
+    "granite-8b": "granite_8b",
+    "smollm-360m": "smollm_360m",
+    "command-r-35b": "command_r_35b",
+    "whisper-medium": "whisper_medium",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+ARCH_NAMES = list(ARCH_MODULES)
+
+
+def get_config(name: str):
+    mod = ARCH_MODULES.get(name, name.replace("-", "_").replace(".", "p"))
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG

@@ -1,0 +1,19 @@
+"""The paper's own model family: MF-based CF with CCL (SimpleX/HEAT).
+
+Sizes follow the paper's large-dataset regime (§5.3): the Amazon Product
+Reviews scale (21M users / 9.4M items, K=128) plus a ~100M-parameter variant
+used by the end-to-end training example (examples/train_mf_100m.py).
+"""
+from repro.core.mf import MFConfig
+
+# Paper-scale (Amazon Product Reviews, Table 3).
+AMAZON = MFConfig(num_users=20_980_000, num_items=9_350_000, emb_dim=128,
+                  num_negatives=64, history_len=100, tile_size=1024,
+                  refresh_interval=4096)
+
+# ~100M-parameter end-to-end config: (400k + 400k) * 128 ≈ 102M.
+MF_100M = MFConfig(num_users=400_000, num_items=400_000, emb_dim=128,
+                   num_negatives=64, history_len=0, tile_size=1024,
+                   refresh_interval=2048)
+
+CONFIG = AMAZON

@@ -1,0 +1,10 @@
+"""whisper-medium [audio] — enc-dec, 24L each side, d=1024 16H d_ff=4096,
+vocab=51865; conv frontend is a STUB per the assignment (input_specs provides
+precomputed frame embeddings, 1500 frames).  [arXiv:2212.04356; unverified]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+    vocab=51865, encoder_layers=24, encoder_seq=1500, mlp_kind="gelu",
+)

@@ -1,0 +1,22 @@
+"""HEAT core: the paper's contribution as composable JAX modules.
+
+- losses:       CCL (Eq. 3) with custom-VJP residual reuse (Eq. 4/5, §4.4)
+- similarity:   fused no-materialization similarity (§4.3) + bmm baseline
+- samplers:     uniform + random-tiling negative samplers (§4.2)
+- tiling:       Algorithm 1 (N1, N2) autotuner on a TPU cost model
+- mf:           MF model + the full HEAT train step (Fig. 3)
+- aggregation:  SimpleX behavior aggregation + deferred m-step sync (§4.5)
+- heat_head:    the technique as a sampled-CCL output head for LMs
+- metrics:      Recall@K / NDCG@K (Table 5)
+"""
+from repro.core.losses import (
+    CCLConfig,
+    bpr_loss,
+    ccl_loss_autodiff,
+    ccl_loss_fused,
+    ccl_loss_simplex_bmm,
+    mse_loss_dot,
+)
+from repro.core.mf import Batch, MFConfig, MFParams, MFState, heat_train_step, init_mf
+from repro.core.samplers import TileState, sample_uniform, tile_init, tile_refresh, tile_sample
+from repro.core.tiling import HardwareModel, TilingPlan, tune_tiling

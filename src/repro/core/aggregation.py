@@ -1,0 +1,111 @@
+"""SimpleX behavior aggregation layer + HEAT's optimized parallel update (§4.5).
+
+The aggregation layer fuses a user's embedding with an aggregate of their
+historical item embeddings:
+
+    m_u   = aggregate({T_h : h in history(u)})          (avg-pool / attention)
+    e_u'  = g * S_u + (1 - g) * (m_u @ W)               (W: (K, K) dense)
+
+HEAT's §4.5 problem: W is *dense* and shared by every thread, so per-step
+updates conflict.  Its fix — accumulate W-gradients locally and flush every
+``m`` iterations (m=32) — maps in SPMD to **deferred synchronization**: each
+data shard accumulates W-grads locally across a microbatch scan, and the
+all-reduce + weight update happens once per flush interval.  That divides the
+aggregator's collective bytes by m (DESIGN.md §5) and removes the paper's
+write conflicts by construction (there are no racing writes in SPMD).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AggregatorParams(NamedTuple):
+    w: jax.Array            # (K, K)
+    attn_q: Optional[jax.Array] = None   # (K, K) for self/user attention
+
+
+def init_aggregator(rng: jax.Array, emb_dim: int, kind: str = "avg",
+                    dtype=jnp.float32) -> AggregatorParams:
+    k1, k2 = jax.random.split(rng)
+    scale = 1.0 / jnp.sqrt(emb_dim)
+    w = jax.random.normal(k1, (emb_dim, emb_dim), dtype) * scale
+    attn_q = (jax.random.normal(k2, (emb_dim, emb_dim), dtype) * scale
+              if kind in ("self_attn", "user_attn") else None)
+    return AggregatorParams(w=w, attn_q=attn_q)
+
+
+def aggregate(params: AggregatorParams, user_emb: jax.Array, hist_emb: jax.Array,
+              hist_mask: jax.Array, *, gate: float = 0.5,
+              kind: str = "avg") -> jax.Array:
+    """user_emb (B,K), hist_emb (B,H,K), hist_mask (B,H) -> fused user (B,K).
+
+    kinds: "avg" (YouTubeNet-style average pooling), "self_attn",
+    "user_attn" — the three choices named in §4.5.
+    """
+    denom = jnp.maximum(jnp.sum(hist_mask, axis=-1, keepdims=True), 1.0)
+    if kind == "avg":
+        pooled = jnp.einsum("bhk,bh->bk", hist_emb, hist_mask) / denom
+    elif kind == "self_attn":
+        scores = jnp.einsum("bhk,kq,bjq->bhj", hist_emb, params.attn_q, hist_emb)
+        scores = jnp.where(hist_mask[:, None, :] > 0, scores, -1e9)
+        attn = jax.nn.softmax(scores / jnp.sqrt(hist_emb.shape[-1]), axis=-1)
+        ctx = jnp.einsum("bhj,bjk->bhk", attn, hist_emb)
+        pooled = jnp.einsum("bhk,bh->bk", ctx, hist_mask) / denom
+    elif kind == "user_attn":
+        scores = jnp.einsum("bk,kq,bhq->bh", user_emb, params.attn_q, hist_emb)
+        scores = jnp.where(hist_mask > 0, scores, -1e9)
+        attn = jax.nn.softmax(scores / jnp.sqrt(hist_emb.shape[-1]), axis=-1)
+        pooled = jnp.einsum("bh,bhk->bk", attn, hist_emb)
+    else:
+        raise ValueError(f"unknown aggregation kind {kind!r}")
+    return gate * user_emb + (1.0 - gate) * (pooled @ params.w)
+
+
+class AccumulatorState(NamedTuple):
+    """Local gradient accumulator for the dense aggregator weights (§4.5)."""
+
+    grad_sum: AggregatorParams   # running sum of grads (same tree as params)
+    count: jax.Array             # () int32 — microbatches since last flush
+
+
+def accumulator_init(params: AggregatorParams) -> AccumulatorState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p) if p is not None else None, params)
+    return AccumulatorState(grad_sum=zeros, count=jnp.zeros((), jnp.int32))
+
+
+def accumulate(state: AccumulatorState, grads: AggregatorParams) -> AccumulatorState:
+    new_sum = jax.tree.map(lambda a, g: a + g if a is not None else None,
+                           state.grad_sum, grads)
+    return AccumulatorState(grad_sum=new_sum, count=state.count + 1)
+
+
+def maybe_flush(state: AccumulatorState, params: AggregatorParams, lr: float,
+                flush_every: int, *, axis_name: Optional[str] = None):
+    """Every ``flush_every`` microbatches: (all-reduce +) SGD-update W.
+
+    Listing 1's update  W -= lr * accu_grad / m , with the all-reduce (psum
+    mean over ``axis_name``) happening only on flush steps — the distributed
+    analogue of writing the shared weights every m iterations.
+    Returns (params, state).
+    """
+
+    def flush(args):
+        p, s = args
+        mean_g = jax.tree.map(
+            lambda g: g / jnp.maximum(s.count.astype(g.dtype), 1.0)
+            if g is not None else None, s.grad_sum)
+        if axis_name is not None:
+            mean_g = jax.tree.map(
+                lambda g: jax.lax.pmean(g, axis_name) if g is not None else None,
+                mean_g)
+        new_p = jax.tree.map(
+            lambda w, g: w - lr * g if w is not None else None, p, mean_g)
+        return new_p, accumulator_init(p)
+
+    def keep(args):
+        return args
+
+    return jax.lax.cond(state.count >= flush_every, flush, keep, (params, state))

@@ -1,0 +1,122 @@
+"""HEAT-CCL output head for language models (DESIGN.md §4).
+
+The assigned architecture pool is LM-family transformers; HEAT's technique
+targets huge embedding tables with sampled contrastive training.  An LM's
+output table (up to 256 K rows here) *is* an item table: this head replaces
+the full-vocab softmax with SimpleX/HEAT training of the output embeddings —
+
+    positive  = output embedding of the target token,
+    negatives = n rows drawn by the random-tiling sampler (§4.2), **shared
+                across the step's tokens** (the per-data-shard analogue of the
+                paper's per-thread negative set),
+    loss      = CCL over cosine similarities (Eq. 3).
+
+Roofline effect (measured in EXPERIMENTS.md §Perf): the full-softmax head is
+a (tokens, d) x (d, V) matmul + V-wide softmax + a (tokens, V) x (V, d)
+backward; the HEAT head is (tokens, d) x (d, 1+n) with n ~ 64-128 — a ~V/n
+reduction in head FLOPs — and the only table traffic is a 1-row-per-token
+positive gather plus an n-row negative gather, so with the table row-sharded
+over `model` the per-step logits all-reduce disappears.
+
+Gradients flow to the table through the gathers (plain autodiff scatter), so
+no detached-copy staleness exists in the LM head; the custom-VJP residual
+reuse lives in the (B, n, K) per-example MF core where it pays (§4.4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import samplers
+
+EPS = 1e-12
+
+
+class HeatHeadConfig(NamedTuple):
+    num_negatives: int = 64
+    mu: float = 1.0
+    theta: float = 0.0
+    similarity: str = "cosine"
+    tile_size: int = 0          # 0 = uniform sampling over the vocab
+    refresh_interval: int = 1024
+
+
+class HeadTileState(NamedTuple):
+    """Id-only tile for the LM head (embeddings are gathered through the
+    table so gradients flow; only the *sampling space* is tiled, §4.2)."""
+
+    tile_ids: jax.Array     # (N1,) int32
+    step: jax.Array         # () int32
+
+
+def head_tile_init(rng: jax.Array, vocab: int, tile_size: int) -> HeadTileState:
+    return HeadTileState(samplers.sample_uniform(rng, vocab, (tile_size,)),
+                         jnp.zeros((), jnp.int32))
+
+
+def head_tile_refresh(state: HeadTileState, rng: jax.Array, vocab: int,
+                      refresh_interval: int) -> HeadTileState:
+    def do(s):
+        return HeadTileState(
+            samplers.sample_uniform(rng, vocab, s.tile_ids.shape),
+            jnp.zeros((), jnp.int32))
+
+    def keep(s):
+        return HeadTileState(s.tile_ids, s.step + 1)
+
+    return jax.lax.cond(state.step >= refresh_interval - 1, do, keep, state)
+
+
+def sampled_ccl_loss(hidden: jax.Array, targets: jax.Array, out_table: jax.Array,
+                     rng: jax.Array, cfg: HeatHeadConfig,
+                     tile: Optional[HeadTileState] = None,
+                     mask: Optional[jax.Array] = None):
+    """hidden (B,S,D), targets (B,S) int32, out_table (V,D) -> (loss, new_tile)."""
+    b, s, d = hidden.shape
+    h = hidden.reshape(b * s, d)
+    pos_e = out_table[targets.reshape(b * s)]                    # (T, D)
+
+    r_neg, r_tile = jax.random.split(rng)
+    n = cfg.num_negatives
+    if tile is not None:
+        local = jax.random.randint(r_neg, (n,), 0, tile.tile_ids.shape[0])
+        neg_ids = tile.tile_ids[local]
+        new_tile = head_tile_refresh(tile, r_tile, out_table.shape[0],
+                                     cfg.refresh_interval)
+    else:
+        neg_ids = samplers.sample_uniform(r_neg, out_table.shape[0], (n,))
+        new_tile = None
+    neg_e = out_table[neg_ids]                                   # (n, D)
+
+    if cfg.similarity == "cosine":
+        inv_h = jax.lax.rsqrt(jnp.sum(h * h, -1) + EPS)          # (T,)
+        inv_p = jax.lax.rsqrt(jnp.sum(pos_e * pos_e, -1) + EPS)
+        inv_n = jax.lax.rsqrt(jnp.sum(neg_e * neg_e, -1) + EPS)  # (n,)
+        pos_sim = jnp.sum(h * pos_e, -1) * inv_h * inv_p
+        neg_sim = (h @ neg_e.T) * inv_h[:, None] * inv_n[None, :]
+    else:
+        pos_sim = jnp.sum(h * pos_e, -1)
+        neg_sim = h @ neg_e.T
+    per_tok = (1.0 - pos_sim) + (cfg.mu / n) * jnp.sum(
+        jnp.maximum(neg_sim - cfg.theta, 0.0), axis=-1)
+    if mask is not None:
+        m = mask.reshape(b * s).astype(per_tok.dtype)
+        loss = jnp.sum(per_tok * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        loss = jnp.mean(per_tok)
+    return loss, new_tile
+
+
+def full_softmax_loss(hidden: jax.Array, targets: jax.Array, out_table: jax.Array,
+                      mask: Optional[jax.Array] = None) -> jax.Array:
+    """Baseline head: full-vocab cross entropy."""
+    logits = jnp.einsum("bsd,vd->bsv", hidden, out_table)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt
+    if mask is not None:
+        m = mask.astype(nll.dtype)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,150 @@
+"""Cosine Contrastive Loss (CCL, SimpleX Eq. 3) with HEAT's aggressive data
+reuse (paper §4.4) implemented as a ``jax.custom_vjp``.
+
+The paper's observation: operator-level autodiff (PyTorch autograd — and,
+equally, naive XLA autodiff) recomputes ``sum(S_u^2)``, ``sum(T_i^2)`` and
+``sum(S_u T_i)`` when backpropagating through the cosine similarity, even
+though the forward pass already produced them.  HEAT caches the three scalars
+per pair and evaluates the analytic gradient (paper Eq. 4/5) directly.
+
+Here the forward pass stores :class:`SimilarityResiduals` and the backward
+pass is the closed-form Eq. 4/5 contraction — zero dot products are
+recomputed.  ``ccl_loss_autodiff`` keeps the plain-autodiff version as the
+baseline that benchmarks/bench_breakdown.py measures against.
+
+Note on paper Eq. 5: the printed equation carries a leading minus sign that is
+inconsistent with Eq. 4 by u<->i symmetry (and with finite differences); we
+implement the mathematically correct sign and verify both against
+``jax.grad`` of the reference in tests/test_losses.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import (
+    EPS,
+    SimilarityResiduals,
+    cosine_from_stats,
+    pair_stats,
+    simplex_bmm_similarity,
+)
+
+
+class CCLConfig(NamedTuple):
+    """SimpleX CCL hyperparameters: weight ``mu`` and margin ``theta``."""
+
+    mu: float = 1.0
+    theta: float = 0.0
+    similarity: str = "cosine"  # "cosine" | "dot"
+
+
+def _ccl_from_sims(pos_sim: jax.Array, neg_sim: jax.Array, mu: float, theta: float) -> jax.Array:
+    """Eq. 3: L(u,i) = (1 - x_ui) + mu/|N| * sum_j relu(x_uj - theta)."""
+    neg_part = jnp.maximum(neg_sim - theta, 0.0)
+    per_example = (1.0 - pos_sim) + (mu / neg_sim.shape[-1]) * jnp.sum(neg_part, axis=-1)
+    return jnp.mean(per_example)
+
+
+# ----------------------------------------------------------------------------
+# HEAT path: fused similarity + CCL with residual reuse (custom VJP).
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def ccl_loss_fused(user: jax.Array, pos: jax.Array, negs: jax.Array,
+                   mu: float = 1.0, theta: float = 0.0, similarity: str = "cosine") -> jax.Array:
+    """CCL loss over a batch of (user, positive, n negatives) embeddings.
+
+    user: (B, K), pos: (B, K), negs: (B, n, K) -> scalar mean loss.
+    """
+    loss, _ = _ccl_fwd_impl(user, pos, negs, mu, theta, similarity)
+    return loss
+
+
+def _ccl_fwd_impl(user, pos, negs, mu, theta, similarity):
+    res = pair_stats(user, pos, negs)
+    if similarity == "cosine":
+        pos_sim, neg_sim = cosine_from_stats(res)
+    elif similarity == "dot":
+        pos_sim, neg_sim = res.up, res.un
+    else:
+        raise ValueError(f"unknown similarity {similarity!r}")
+    loss = _ccl_from_sims(pos_sim, neg_sim, mu, theta)
+    # Residuals: the paper's cached sums + the primal embeddings (needed by
+    # Eq. 4/5 regardless) + the neg-margin mask.  Nothing is recomputed in bwd.
+    return loss, (user, pos, negs, res, neg_sim)
+
+
+def _ccl_fwd(user, pos, negs, mu, theta, similarity):
+    return _ccl_fwd_impl(user, pos, negs, mu, theta, similarity)
+
+
+def _ccl_bwd(mu, theta, similarity, saved, g):
+    user, pos, negs, res, neg_sim = saved
+    batch, n = neg_sim.shape
+    # dL/d pos_sim, dL/d neg_sim  (loss is a mean over the batch)
+    d_ps = (-g / batch) * jnp.ones((batch,), user.dtype)
+    d_ns = (g * mu / (n * batch)) * (neg_sim > theta).astype(user.dtype)
+
+    if similarity == "dot":
+        grad_u = d_ps[:, None] * pos + jnp.einsum("bn,bnk->bk", d_ns, negs)
+        grad_p = d_ps[:, None] * user
+        grad_n = d_ns[:, :, None] * user[:, None, :]
+        return grad_u, grad_p, grad_n
+
+    # Cosine: Eq. 4/5 evaluated from the cached sums (uu, pp, nn, up, un).
+    uu = res.uu + EPS
+    pp = res.pp + EPS
+    nn = res.nn + EPS
+    inv_u = jax.lax.rsqrt(uu)
+    inv_p = jax.lax.rsqrt(pp)
+    inv_n = jax.lax.rsqrt(nn)
+
+    wp = d_ps * inv_u * inv_p                     # (B,)
+    wn = d_ns * inv_u[:, None] * inv_n            # (B, n)
+
+    # Eq. 4:  d cos/d u = (p * uu - up * u) / (uu^{3/2} sqrt(pp))   [and negs]
+    coeff_u = (wp * res.up + jnp.sum(wn * res.un, axis=-1)) / uu
+    grad_u = (wp[:, None] * pos
+              + jnp.einsum("bn,bnk->bk", wn, negs)
+              - coeff_u[:, None] * user)
+    # Eq. 5 (sign corrected): d cos/d p = (u * pp - up * p) / (pp^{3/2} sqrt(uu))
+    grad_p = wp[:, None] * user - (wp * res.up / pp)[:, None] * pos
+    grad_n = (wn[:, :, None] * user[:, None, :]
+              - (wn * res.un / nn)[:, :, None] * negs)
+    return grad_u, grad_p, grad_n
+
+
+ccl_loss_fused.defvjp(_ccl_fwd, _ccl_bwd)
+
+
+# ----------------------------------------------------------------------------
+# Baselines.
+# ----------------------------------------------------------------------------
+
+def ccl_loss_autodiff(user, pos, negs, mu=1.0, theta=0.0, similarity="cosine"):
+    """Same math, plain autodiff (no residual reuse).  The 'autograd' baseline."""
+    loss, _ = _ccl_fwd_impl(user, pos, negs, mu, theta, similarity)
+    return loss
+
+
+def ccl_loss_simplex_bmm(user, pos, negs, mu=1.0, theta=0.0):
+    """SimpleX-style concat+normalize+bmm forward (paper §3.2) + autodiff."""
+    pos_sim, neg_sim = simplex_bmm_similarity(user, pos, negs)
+    return _ccl_from_sims(pos_sim, neg_sim, mu, theta)
+
+
+def mse_loss_dot(user, pos, rating=1.0):
+    """CuMF_SGD-class baseline: dot-product similarity + MSE, one positive."""
+    pred = jnp.sum(user * pos, axis=-1)
+    return jnp.mean((rating - pred) ** 2)
+
+
+def bpr_loss(user, pos, negs):
+    """BPR baseline (related work §6): -log sigmoid(u.p - u.n), one neg used."""
+    up = jnp.sum(user * pos, axis=-1)
+    un = jnp.einsum("bk,bnk->bn", user, negs)
+    return -jnp.mean(jax.nn.log_sigmoid(up[:, None] - un))

@@ -1,0 +1,44 @@
+"""Ranking metrics used by the paper's accuracy tables (Recall@20, NDCG@20)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_exclude_train(scores: jax.Array, train_mask: jax.Array, k: int) -> jax.Array:
+    """Top-k item ids per user, excluding training positives.
+
+    scores: (B, I); train_mask: (B, I) bool (True = seen in training).
+    """
+    masked = jnp.where(train_mask, -jnp.inf, scores)
+    return jax.lax.top_k(masked, k)[1]
+
+
+def recall_at_k(topk_ids: jax.Array, test_mask: jax.Array) -> jax.Array:
+    """Recall@K = |hits| / |test positives| averaged over users with positives."""
+    hits = jnp.take_along_axis(test_mask, topk_ids, axis=1)       # (B, k)
+    num_pos = jnp.sum(test_mask, axis=1)
+    valid = num_pos > 0
+    rec = jnp.sum(hits, axis=1) / jnp.maximum(num_pos, 1)
+    return jnp.sum(jnp.where(valid, rec, 0.0)) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def ndcg_at_k(topk_ids: jax.Array, test_mask: jax.Array) -> jax.Array:
+    """NDCG@K with binary relevance."""
+    k = topk_ids.shape[1]
+    hits = jnp.take_along_axis(test_mask, topk_ids, axis=1).astype(jnp.float32)
+    discounts = 1.0 / jnp.log2(jnp.arange(2, k + 2, dtype=jnp.float32))
+    dcg = jnp.sum(hits * discounts[None, :], axis=1)
+    num_pos = jnp.sum(test_mask, axis=1)
+    ideal_hits = jnp.arange(k)[None, :] < num_pos[:, None]
+    idcg = jnp.sum(ideal_hits * discounts[None, :], axis=1)
+    valid = num_pos > 0
+    ndcg = jnp.where(valid, dcg / jnp.maximum(idcg, 1e-12), 0.0)
+    return jnp.sum(ndcg) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def evaluate_ranking(scores: jax.Array, train_mask: jax.Array, test_mask: jax.Array,
+                     k: int = 20) -> dict[str, jax.Array]:
+    ids = topk_exclude_train(scores, train_mask, k)
+    return {f"recall@{k}": recall_at_k(ids, test_mask),
+            f"ndcg@{k}": ndcg_at_k(ids, test_mask)}

@@ -1,0 +1,208 @@
+"""Matrix-factorization CF model and the HEAT training step (paper §4.1).
+
+One training step, as in Fig. 3:
+  (1) gather user + positive embeddings (sparse lookups),
+  (2) sample n negatives — uniform (baseline) or from the resident tile (§4.2),
+  (3) optional behavior aggregation (§4.5),
+  (4) fused similarity + CCL with residual reuse (§4.3, §4.4),
+  (5) analytic gradients from the cached sums,
+  (6) sparse row updates: only touched rows are written (§3.1 fix), with
+      duplicate indices pre-reduced by scatter-add semantics (conflict-free),
+  (7) aggregator grads accumulate locally, flushing every m steps (§4.5).
+
+All steps are jittable; sampler/accumulator state is threaded functionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core import samplers
+from repro.core.losses import (
+    ccl_loss_autodiff,
+    ccl_loss_fused,
+    ccl_loss_simplex_bmm,
+    mse_loss_dot,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MFConfig:
+    num_users: int
+    num_items: int
+    emb_dim: int = 128
+    num_negatives: int = 64
+    mu: float = 1.0
+    theta: float = 0.0
+    similarity: str = "cosine"
+    lr: float = 0.05
+    # Behavior aggregation (SimpleX). history_len 0 disables it (MF-CCL).
+    history_len: int = 0
+    aggregation_kind: str = "avg"
+    gate: float = 0.5
+    flush_every: int = 32          # paper's m (mini_batch_size in Listing 1)
+    # Random tiling. tile_size 0 disables it (original random sampler).
+    tile_size: int = 0
+    refresh_interval: int = 1024
+    init: str = "normal"           # "normal" | "xavier"
+    init_std: float = 0.1
+    dtype: str = "float32"
+
+
+class MFParams(NamedTuple):
+    user_table: jax.Array                          # (U, K)
+    item_table: jax.Array                          # (I, K)
+    aggregator: Optional[agg.AggregatorParams]     # None when history_len == 0
+
+
+class MFState(NamedTuple):
+    params: MFParams
+    tile: Optional[samplers.TileState]
+    accum: Optional[agg.AccumulatorState]
+    step: jax.Array
+
+
+def init_mf(rng: jax.Array, cfg: MFConfig) -> MFState:
+    ku, ki, ka, kt = jax.random.split(rng, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.init == "xavier":
+        su = jnp.sqrt(2.0 / (cfg.num_users + cfg.emb_dim))
+        si = jnp.sqrt(2.0 / (cfg.num_items + cfg.emb_dim))
+    else:
+        su = si = cfg.init_std
+    params = MFParams(
+        user_table=jax.random.normal(ku, (cfg.num_users, cfg.emb_dim), dtype) * su,
+        item_table=jax.random.normal(ki, (cfg.num_items, cfg.emb_dim), dtype) * si,
+        aggregator=(agg.init_aggregator(ka, cfg.emb_dim, cfg.aggregation_kind, dtype)
+                    if cfg.history_len > 0 else None),
+    )
+    tile = (samplers.tile_init(kt, params.item_table, cfg.tile_size)
+            if cfg.tile_size > 0 else None)
+    accum = (agg.accumulator_init(params.aggregator)
+             if params.aggregator is not None else None)
+    return MFState(params=params, tile=tile, accum=accum,
+                   step=jnp.zeros((), jnp.int32))
+
+
+class Batch(NamedTuple):
+    user_ids: jax.Array                 # (B,)
+    pos_ids: jax.Array                  # (B,)
+    hist_ids: Optional[jax.Array] = None   # (B, H)
+    hist_mask: Optional[jax.Array] = None  # (B, H)
+
+
+def _forward_loss(user_e, pos_e, neg_e, hist_e, hist_mask, aggregator, cfg: MFConfig,
+                  loss_impl: str):
+    """Loss as a function of *gathered* embeddings (the HEAT parallelization:
+    gradients are computed w.r.t. the touched rows only, never the tables)."""
+    if aggregator is not None:
+        user_e = agg.aggregate(aggregator, user_e, hist_e, hist_mask,
+                               gate=cfg.gate, kind=cfg.aggregation_kind)
+    if loss_impl == "fused":
+        return ccl_loss_fused(user_e, pos_e, neg_e, cfg.mu, cfg.theta, cfg.similarity)
+    if loss_impl == "autodiff":
+        return ccl_loss_autodiff(user_e, pos_e, neg_e, cfg.mu, cfg.theta, cfg.similarity)
+    if loss_impl == "simplex_bmm":
+        return ccl_loss_simplex_bmm(user_e, pos_e, neg_e, cfg.mu, cfg.theta)
+    if loss_impl == "mse_dot":
+        return mse_loss_dot(user_e, pos_e)
+    raise ValueError(f"unknown loss_impl {loss_impl!r}")
+
+
+def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
+                    *, loss_impl: str = "fused", sparse_update: bool = True):
+    """One HEAT iteration.  Returns (new_state, loss).
+
+    ``loss_impl`` selects the fused/reuse path (HEAT) or a baseline;
+    ``sparse_update=False`` reproduces the torch dense-update behaviour
+    (a full-table update) for benchmarking.
+    """
+    params, tile = state.params, state.tile
+    r_neg, r_tile = jax.random.split(rng)
+
+    user_e = params.user_table[batch.user_ids]
+    pos_e = params.item_table[batch.pos_ids]
+    n_shape = (batch.user_ids.shape[0], cfg.num_negatives)
+
+    if tile is not None:
+        neg_ids, neg_e, neg_local = samplers.tile_sample(tile, r_neg, n_shape)
+    else:
+        neg_ids = samplers.sample_uniform(r_neg, cfg.num_items, n_shape)
+        neg_e = params.item_table[neg_ids]
+        neg_local = None
+
+    hist_e = hist_mask = None
+    if params.aggregator is not None:
+        hist_e = params.item_table[batch.hist_ids]
+        hist_mask = batch.hist_mask.astype(user_e.dtype)
+
+    def loss_fn(u, p, n, h, a):
+        return _forward_loss(u, p, n, h, hist_mask, a, cfg, loss_impl)
+
+    argnums = (0, 1, 2) + ((3, 4) if params.aggregator is not None else ())
+    loss, grads = jax.value_and_grad(loss_fn, argnums=argnums)(
+        user_e, pos_e, neg_e, hist_e, params.aggregator)
+    g_user, g_pos, g_neg = grads[0], grads[1], grads[2]
+
+    if sparse_update:
+        # §3.1/§4.3: touched rows only. ``.at[].add`` pre-reduces duplicate
+        # indices (segment-sum), so concurrent-row updates cannot conflict.
+        new_user = params.user_table.at[batch.user_ids].add(-cfg.lr * g_user)
+        new_item = params.item_table.at[batch.pos_ids].add(-cfg.lr * g_pos)
+        new_item = new_item.at[neg_ids.reshape(-1)].add(
+            -cfg.lr * g_neg.reshape(-1, cfg.emb_dim))
+        if params.aggregator is not None:
+            g_hist = grads[3]
+            new_item = new_item.at[batch.hist_ids.reshape(-1)].add(
+                -cfg.lr * g_hist.reshape(-1, cfg.emb_dim))
+    else:
+        # Dense baseline: materialize full-table gradients and update every row
+        # (what torch.nn.Embedding with dense grads does — Table 1).
+        dense_gu = jnp.zeros_like(params.user_table).at[batch.user_ids].add(g_user)
+        dense_gi = jnp.zeros_like(params.item_table).at[batch.pos_ids].add(g_pos)
+        dense_gi = dense_gi.at[neg_ids.reshape(-1)].add(
+            g_neg.reshape(-1, cfg.emb_dim))
+        if params.aggregator is not None:
+            dense_gi = dense_gi.at[batch.hist_ids.reshape(-1)].add(
+                grads[3].reshape(-1, cfg.emb_dim))
+        new_user = params.user_table - cfg.lr * dense_gu
+        new_item = params.item_table - cfg.lr * dense_gi
+
+    # Tile coherence: write the same updates through to the replicated copy
+    # (negatives by tile-local index; positives/history by global-id match —
+    # the cache-coherence analogue), then refresh on schedule (§4.2).
+    if tile is not None:
+        tile = samplers.tile_apply_grads(tile, neg_local, g_neg, cfg.lr)
+        tile = samplers.tile_apply_global_grads(tile, batch.pos_ids, g_pos, cfg.lr)
+        if params.aggregator is not None:
+            tile = samplers.tile_apply_global_grads(
+                tile, batch.hist_ids, grads[3], cfg.lr)
+        tile = samplers.tile_refresh(tile, r_tile, new_item, cfg.refresh_interval)
+
+    # Aggregator: local accumulation, deferred flush (§4.5 / Listing 1).
+    aggregator, accum = params.aggregator, state.accum
+    if aggregator is not None:
+        accum = agg.accumulate(accum, grads[4])
+        aggregator, accum = agg.maybe_flush(accum, aggregator, cfg.lr, cfg.flush_every)
+
+    new_state = MFState(
+        params=MFParams(new_user, new_item, aggregator),
+        tile=tile, accum=accum, step=state.step + 1)
+    return new_state, loss
+
+
+def scores_all_items(params: MFParams, user_ids: jax.Array,
+                     similarity: str = "cosine") -> jax.Array:
+    """(B, I) scores for evaluation (Recall@K / NDCG@K)."""
+    u = params.user_table[user_ids]
+    t = params.item_table
+    s = u @ t.T
+    if similarity == "cosine":
+        un = jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-12)
+        tn = jnp.linalg.norm(t, axis=-1).clip(1e-12)
+        s = s / un / tn[None, :]
+    return s

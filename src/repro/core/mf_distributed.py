@@ -1,0 +1,144 @@
+"""Distributed HEAT CF training — the paper's §7 future work, implemented.
+
+    "we plan to first extend our work to support distributed training with
+     rating matrix partitioning and efficient communication"  (HEAT, §7)
+
+Partitioning (DESIGN.md §5, rating-matrix reading):
+  - **user table** (U, K): row-sharded over the data axes — each data shard
+    owns a contiguous user range, and every batch row is drawn from the
+    owning shard's range (the rating-matrix row partition).  User lookups and
+    updates are therefore shard-local: zero collectives.
+  - **item table** (I, K): row-sharded over `model` (items are shared by all
+    users — the rating-matrix column dimension).  Positive lookups cross the
+    model axis (one (B, K) combine per step); negative lookups go through the
+    per-shard random tile, whose (N1, K) gather is amortized over the refresh
+    interval N2 — HEAT's cache insight as a communication schedule.
+  - **aggregator weights** (K, K): replicated; gradients accumulate locally
+    and all-reduce every ``flush_every`` steps (§4.5 -> deferred sync).
+
+Everything below reuses the single-host step (`mf.heat_train_step`) under
+pjit: the functions here provide the sharding plan, the partitioned batch
+sampler, and the dry-run program so the paper's own model runs the same
+mesh/roofline machinery as the LM zoo (EXPERIMENTS.md §Dry-run addendum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import mf, samplers
+from repro.core.aggregation import AccumulatorState, AggregatorParams
+from repro.models.params import fit_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class MFShapeConfig:
+    """Input shape for the CF dry-run cells (global batch of interactions)."""
+
+    name: str
+    global_batch: int
+
+
+MF_SHAPES = {
+    "mf_train_64k": MFShapeConfig("mf_train_64k", 65536),
+    "mf_train_1m": MFShapeConfig("mf_train_1m", 1048576),
+}
+
+
+def state_specs(cfg: mf.MFConfig, mesh: Mesh) -> mf.MFState:
+    """PartitionSpec tree mirroring MFState (fit to the mesh)."""
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = ("pod", "data")
+    user = fit_spec((cfg.num_users, cfg.emb_dim), P(dp, None), ms)
+    item = fit_spec((cfg.num_items, cfg.emb_dim), P("model", None), ms)
+    agg = (AggregatorParams(w=P(), attn_q=None) if cfg.history_len > 0 else None)
+    tile = (samplers.TileState(tile_ids=P(), tile_emb=P(), step=P())
+            if cfg.tile_size > 0 else None)
+    accum = (AccumulatorState(grad_sum=agg, count=P())
+             if cfg.history_len > 0 else None)
+    return mf.MFState(params=mf.MFParams(user, item, agg), tile=tile,
+                      accum=accum, step=P())
+
+
+def abstract_state(cfg: mf.MFConfig, dtype=jnp.float32) -> mf.MFState:
+    """ShapeDtypeStruct stand-ins (no allocation) for the dry-run."""
+    k = cfg.emb_dim
+    sds = jax.ShapeDtypeStruct
+    agg = (AggregatorParams(w=sds((k, k), dtype), attn_q=None)
+           if cfg.history_len > 0 else None)
+    tile = (samplers.TileState(tile_ids=sds((cfg.tile_size,), jnp.int32),
+                               tile_emb=sds((cfg.tile_size, k), dtype),
+                               step=sds((), jnp.int32))
+            if cfg.tile_size > 0 else None)
+    accum = (AccumulatorState(
+        grad_sum=AggregatorParams(w=sds((k, k), dtype), attn_q=None),
+        count=sds((), jnp.int32)) if cfg.history_len > 0 else None)
+    return mf.MFState(
+        params=mf.MFParams(sds((cfg.num_users, k), dtype),
+                           sds((cfg.num_items, k), dtype), agg),
+        tile=tile, accum=accum, step=sds((), jnp.int32))
+
+
+def abstract_batch(cfg: mf.MFConfig, global_batch: int) -> mf.Batch:
+    sds = jax.ShapeDtypeStruct
+    hist = cfg.history_len
+    return mf.Batch(
+        user_ids=sds((global_batch,), jnp.int32),
+        pos_ids=sds((global_batch,), jnp.int32),
+        hist_ids=sds((global_batch, hist), jnp.int32) if hist else None,
+        hist_mask=sds((global_batch, hist), jnp.float32) if hist else None)
+
+
+def batch_specs(cfg: mf.MFConfig, mesh: Mesh, global_batch: int) -> mf.Batch:
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = ("pod", "data")
+    vec = fit_spec((global_batch,), P(dp), ms)
+    hist = (fit_spec((global_batch, cfg.history_len), P(dp, None), ms)
+            if cfg.history_len else None)
+    return mf.Batch(user_ids=vec, pos_ids=vec, hist_ids=hist, hist_mask=hist)
+
+
+def partitioned_batch(ds_sampler, step: int, global_batch: int,
+                      num_users: int, num_shards: int, seed: int = 0):
+    """Rating-matrix row partition: shard s draws users from its own range
+    [s*U/S, (s+1)*U/S) so user-table access is shard-local."""
+    import numpy as np
+    r = np.random.default_rng(hash((seed, step)) % (2 ** 63))
+    per = global_batch // num_shards
+    rows = num_users // num_shards
+    users = np.concatenate([
+        r.integers(s * rows, (s + 1) * rows, per) for s in range(num_shards)])
+    return users.astype(np.int32)
+
+
+def build_mf_cell(cfg: mf.MFConfig, mesh: Mesh, global_batch: int,
+                  loss_impl: str = "fused"):
+    """Dry-run program for the distributed HEAT step (mirrors specs.build_cell).
+
+    Returns (fn, abstract args, in_shardings, donate) consumable by
+    launch/dryrun.lower_cell's jit/lower/compile path.
+    """
+    import functools
+
+    state_abs = abstract_state(cfg)
+    sspec = state_specs(cfg, mesh)
+    batch_abs = abstract_batch(cfg, global_batch)
+    bspec = batch_specs(cfg, mesh, global_batch)
+    rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    step_fn = functools.partial(mf.heat_train_step, cfg=cfg,
+                                loss_impl=loss_impl, sparse_update=True)
+
+    def to_shardings(spec_tree):
+        return jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp),
+            spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+    return (step_fn, (state_abs, batch_abs, rng_abs),
+            (to_shardings(sspec), to_shardings(bspec),
+             NamedSharding(mesh, P())), (0,))

@@ -1,0 +1,142 @@
+"""Negative samplers: uniform random and HEAT's random tiling (paper §4.2).
+
+Random tiling on CPU: keep ``N1`` item embeddings hot in L2/L3 and sample
+negatives from that tile, refreshing the tile every ``N2`` iterations so the
+effective sampling space is ``M/N2 * N1`` over a run of ``M`` iterations.
+
+TPU / distributed adaptation (DESIGN.md §2): the "cache" is a **replicated
+tile buffer**.  With the item table row-sharded over the `model` axis, a
+per-step random gather of ``n`` negatives is a per-step collective; the tiled
+sampler instead gathers ``N1`` rows **once per refresh interval** and keeps
+them replicated, so per-step negative reads are local.  Row updates are
+written through to the sharded table every step; the replicated tile copy is
+also updated locally, giving bounded staleness <= N2 steps on *cross-shard*
+negative reads only (the CPU original gets coherence for free from the cache
+hierarchy; we quantify the accuracy impact in benchmarks/bench_tiling.py).
+
+Everything is functional: sampler state is an explicit NamedTuple threaded
+through ``jax.lax``-friendly steps, so the whole training step stays jittable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_uniform(rng: jax.Array, num_items: int, shape: tuple[int, ...]) -> jax.Array:
+    """The original random sampler: uniform over the whole item space."""
+    return jax.random.randint(rng, shape, 0, num_items, dtype=jnp.int32)
+
+
+def sample_unique(rng: jax.Array, num_items: int, n: int) -> jax.Array:
+    """n distinct uniform ids (Gumbel-top-k, no O(I) permutation materialized
+    beyond one key vector).  Tiles hold *distinct* rows — like a real cache —
+    which keeps the write-through coherence exact (one tile row per id)."""
+    keys = jax.random.uniform(rng, (num_items,))
+    _, ids = jax.lax.top_k(keys, n)
+    return ids.astype(jnp.int32)
+
+
+class TileState(NamedTuple):
+    """State of one random-tiling sampler (per data shard, like per-thread)."""
+
+    tile_ids: jax.Array    # (N1,) int32 — global item ids currently cached
+    tile_emb: jax.Array    # (N1, K) — replicated copy of those rows
+    step: jax.Array        # () int32 — iterations since last refresh
+
+
+def tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int) -> TileState:
+    ids = sample_unique(rng, item_table.shape[0], tile_size)
+    return TileState(tile_ids=ids, tile_emb=item_table[ids], step=jnp.zeros((), jnp.int32))
+
+
+def tile_refresh(state: TileState, rng: jax.Array, item_table: jax.Array,
+                 refresh_interval: int) -> TileState:
+    """Refresh the cached tile every ``refresh_interval`` steps (lax.cond)."""
+
+    def do_refresh(s: TileState) -> TileState:
+        ids = sample_unique(rng, item_table.shape[0], s.tile_ids.shape[0])
+        return TileState(tile_ids=ids, tile_emb=item_table[ids],
+                         step=jnp.zeros((), jnp.int32))
+
+    def keep(s: TileState) -> TileState:
+        return TileState(s.tile_ids, s.tile_emb, s.step + 1)
+
+    return jax.lax.cond(state.step >= refresh_interval - 1, do_refresh, keep, state)
+
+
+def tile_sample(state: TileState, rng: jax.Array, shape: tuple[int, ...]):
+    """Sample negatives *from the tile*: returns (global_ids, embeddings).
+
+    The embedding read is a gather from the small replicated ``tile_emb`` —
+    the TPU analogue of an L2 hit — instead of the large sharded table.
+    """
+    local = jax.random.randint(rng, shape, 0, state.tile_ids.shape[0], dtype=jnp.int32)
+    return state.tile_ids[local], state.tile_emb[local], local
+
+
+def tile_writeback(state: TileState, local_idx: jax.Array, new_rows: jax.Array) -> TileState:
+    """Write updated negative rows back into the tile copy (coherence analogue).
+
+    ``local_idx``: (...,) tile-local indices whose rows were updated;
+    ``new_rows``: matching (..., K) updated embeddings.  Duplicate indices are
+    resolved by last-write like the table scatter (values, not adds).
+    """
+    flat_idx = local_idx.reshape(-1)
+    flat_rows = new_rows.reshape(-1, new_rows.shape[-1])
+    return state._replace(tile_emb=state.tile_emb.at[flat_idx].set(flat_rows))
+
+
+def tile_apply_grads(state: TileState, local_idx: jax.Array, grads: jax.Array,
+                     lr: float) -> TileState:
+    """SGD write-through on the tile copy: duplicate ids accumulate (scatter-add)."""
+    flat_idx = local_idx.reshape(-1)
+    flat_g = grads.reshape(-1, grads.shape[-1])
+    return state._replace(tile_emb=state.tile_emb.at[flat_idx].add(-lr * flat_g))
+
+
+def tile_apply_global_grads(state: TileState, global_ids: jax.Array,
+                            grads: jax.Array, lr: float) -> TileState:
+    """Write-through for updates addressed by *global* item id (positives /
+    history rows that happen to live in the tile).  The CPU original gets
+    this for free from cache coherence; here a (N1, B) membership mask turns
+    the update into one small matmul — exact for duplicate ids too.
+    """
+    ids = global_ids.reshape(-1)
+    g = grads.reshape(-1, grads.shape[-1])
+    match = (state.tile_ids[:, None] == ids[None, :]).astype(g.dtype)  # (N1,B)
+    return state._replace(tile_emb=state.tile_emb - lr * (match @ g))
+
+
+class ShardedTileState(NamedTuple):
+    """Vectorized tiles for S data shards (paper: per-thread tiles).
+
+    tile_ids: (S, N1), tile_emb: (S, N1, K), step: () — all shards refresh on
+    the same schedule, so a single scalar step suffices and the refresh stays
+    a single fused gather collective.
+    """
+
+    tile_ids: jax.Array
+    tile_emb: jax.Array
+    step: jax.Array
+
+
+def sharded_tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int,
+                      num_shards: int) -> ShardedTileState:
+    ids = sample_uniform(rng, item_table.shape[0], (num_shards, tile_size))
+    return ShardedTileState(tile_ids=ids, tile_emb=item_table[ids],
+                            step=jnp.zeros((), jnp.int32))
+
+
+def sharded_tile_refresh(state: ShardedTileState, rng: jax.Array, item_table: jax.Array,
+                         refresh_interval: int) -> ShardedTileState:
+    def do_refresh(s):
+        ids = sample_uniform(rng, item_table.shape[0], s.tile_ids.shape)
+        return ShardedTileState(ids, item_table[ids], jnp.zeros((), jnp.int32))
+
+    def keep(s):
+        return ShardedTileState(s.tile_ids, s.tile_emb, s.step + 1)
+
+    return jax.lax.cond(state.step >= refresh_interval - 1, do_refresh, keep, state)

@@ -1,0 +1,85 @@
+"""Fused similarity computation (paper §4.3).
+
+SimpleX's PyTorch path is  concat -> reshape -> normalize -> bmm , which HEAT
+identifies as memcpy-bound (Table 2: mem_cp + norms ~ 50% of forward time).
+HEAT's fix on CPU is per-thread vector products with normalization fused into
+the same pass.  The TPU-native reading of that insight (DESIGN.md §2) is:
+never materialize concatenated or normalized copies — compute
+
+    u . p,  u . n_j,  ||u||^2,  ||p||^2,  ||n_j||^2
+
+in a single pass over the embeddings, with the (B,K)x(K,n) contraction shaped
+for the MXU.  This module is the pure-jnp implementation; the Pallas kernel in
+``repro.kernels.ccl_similarity`` implements the same contract with explicit
+VMEM tiling and is validated against this file.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+class SimilarityResiduals(NamedTuple):
+    """The paper's three reusable quantities (§4.4), per user-item pair.
+
+    ``uu`` = sum(S_u^2), ``pp``/``nn`` = sum(T_i^2), ``up``/``un`` = sum(S_u T_i).
+    Saved in the forward pass and reused in the analytic backward (Eq. 4/5)
+    instead of letting autodiff recompute them.
+    """
+
+    uu: jax.Array   # (B,)
+    pp: jax.Array   # (B,)
+    up: jax.Array   # (B,)
+    nn: jax.Array   # (B, n)
+    un: jax.Array   # (B, n)
+
+
+def pair_stats(user: jax.Array, pos: jax.Array, negs: jax.Array) -> SimilarityResiduals:
+    """One fused pass producing every dot/norm needed for cosine sims.
+
+    user: (B, K), pos: (B, K), negs: (B, n, K).  No concat, no normalized
+    copies: the neg contraction is a single batched (1,K)x(K,n) matmul.
+    """
+    uu = jnp.sum(user * user, axis=-1)
+    pp = jnp.sum(pos * pos, axis=-1)
+    up = jnp.sum(user * pos, axis=-1)
+    nn = jnp.sum(negs * negs, axis=-1)                       # (B, n)
+    un = jnp.einsum("bk,bnk->bn", user, negs)                # MXU-shaped
+    return SimilarityResiduals(uu=uu, pp=pp, up=up, nn=nn, un=un)
+
+
+def cosine_from_stats(res: SimilarityResiduals) -> tuple[jax.Array, jax.Array]:
+    """(pos_sim (B,), neg_sim (B,n)) from cached stats."""
+    inv_u = jax.lax.rsqrt(res.uu + EPS)
+    pos_sim = res.up * inv_u * jax.lax.rsqrt(res.pp + EPS)
+    neg_sim = res.un * inv_u[:, None] * jax.lax.rsqrt(res.nn + EPS)
+    return pos_sim, neg_sim
+
+
+def dot_from_stats(res: SimilarityResiduals) -> tuple[jax.Array, jax.Array]:
+    return res.up, res.un
+
+
+def cosine_similarity(user: jax.Array, pos: jax.Array, negs: jax.Array):
+    """Reference fused path: stats + cosine, returning residuals for reuse."""
+    res = pair_stats(user, pos, negs)
+    pos_sim, neg_sim = cosine_from_stats(res)
+    return pos_sim, neg_sim, res
+
+
+def simplex_bmm_similarity(user: jax.Array, pos: jax.Array, negs: jax.Array):
+    """Baseline: the SimpleX concat->normalize->bmm path (paper §3.2).
+
+    Deliberately materializes the concatenated candidate matrix and the
+    normalized copies, exactly like the profiled PyTorch implementation.
+    Used as the performance baseline in benchmarks/bench_epoch_time.py.
+    """
+    cand = jnp.concatenate([pos[:, None, :], negs], axis=1)   # (B, 1+n, K) memcpy
+    u_n = user / jnp.linalg.norm(user, axis=-1, keepdims=True).clip(EPS)
+    c_n = cand / jnp.linalg.norm(cand, axis=-1, keepdims=True).clip(EPS)
+    sims = jnp.einsum("bk,bmk->bm", u_n, c_n)                 # bmm
+    return sims[:, 0], sims[:, 1:]

@@ -1,0 +1,104 @@
+"""Mesh context + logical sharding helpers.
+
+Axis conventions (DESIGN.md §5):
+  - ``pod``   cross-pod data parallelism (outermost)
+  - ``data``  in-pod data parallelism (batch, optimizer ZeRO shards)
+  - ``model`` tensor/expert parallelism (heads, FFN, experts, vocab rows)
+
+Models call :func:`constrain` with *logical* axes; axes absent from the active
+mesh are dropped, so the same model code runs on a single CPU device, a 16x16
+pod, and the 2x16x16 multi-pod mesh.  The active mesh is installed by the
+launcher via :func:`set_mesh` (a context manager) — a deliberate, documented
+global so model code stays mesh-agnostic (the MaxText/ flax logical-axis
+pattern without the flax dependency).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+DATA_AXES = ("pod", "data")     # batch shards over every present data-like axis
+MODEL_AXIS = "model"
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = _MESH
+    set_mesh(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        set_mesh(prev)
+
+
+def mesh_axes() -> frozenset[str]:
+    return frozenset(_MESH.axis_names) if _MESH is not None else frozenset()
+
+
+def resolve(spec: P) -> P:
+    """Drop logical axes that the active mesh does not have."""
+    axes = mesh_axes()
+
+    def keep(ax):
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a in axes)
+            return kept if kept else None
+        return ax if ax in axes else None
+
+    return P(*(keep(ax) for ax in spec))
+
+
+def batch_spec(*trailing) -> P:
+    """P(("pod","data"), *trailing) resolved against the mesh."""
+    return P(DATA_AXES, *trailing)
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without one)."""
+    if _MESH is None or _MESH.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, resolve(spec)))
+
+
+def named(spec: P) -> Optional[NamedSharding]:
+    if _MESH is None:
+        return None
+    return NamedSharding(_MESH, resolve(spec))
+
+
+def data_shards() -> int:
+    if _MESH is None:
+        return 1
+    n = 1
+    for a in DATA_AXES:
+        if a in _MESH.axis_names:
+            n *= _MESH.shape[a]
+    return n
+
+
+def model_shards() -> int:
+    if _MESH is None or MODEL_AXIS not in _MESH.axis_names:
+        return 1
+    return _MESH.shape[MODEL_AXIS]

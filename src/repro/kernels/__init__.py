@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for HEAT's compute hot-spots.
+
+- ccl_similarity:   fused similarity statistics + analytic CCL backward
+- embedding_update: scalar-prefetch gather+fma sparse row update
+- flash_attention:  block-wise causal attention (GQA) for the LM archs
+- ops:              jit'd public wrappers (kernel/ref dispatch)
+- ref:              pure-jnp oracles for allclose validation
+"""
+from repro.kernels.ops import (
+    attention,
+    default_interpret,
+    make_ccl_loss_pallas,
+    sparse_row_update,
+)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused CCL similarity statistics (paper §4.3 + §4.4).
+
+One VMEM pass per batch tile computes every dot/norm the CCL loss and its
+analytic backward need:
+
+    uu = ||u||^2, pp = ||p||^2, up = u.p, nn_j = ||n_j||^2, un_j = u.n_j
+
+This is the TPU adaptation of HEAT's "vector products without concat/reshape":
+the user/pos/neg blocks are tiled HBM->VMEM once, the (Bt,K)x(K,n) negative
+contraction runs on the MXU, and no normalized or concatenated intermediate is
+ever materialized in HBM.  A second kernel evaluates the fused backward from
+the cached statistics (the §4.4 reuse — no dot product is recomputed).
+
+Tiling: grid over batch tiles of ``block_b`` rows.  Per-step VMEM footprint is
+    block_b*K (u) + block_b*K (p) + block_b*n*K (negs) + outputs,
+e.g. 256*128*4B * (2 + 64) = 8.6 MiB for n=64 — comfortably inside VMEM.
+K and n should be multiples of 128 on real hardware (the MXU lane width); the
+wrappers in ops.py pad when they are not.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(u_ref, p_ref, n_ref, uu_ref, pp_ref, up_ref, nn_ref, un_ref):
+    u = u_ref[...].astype(jnp.float32)          # (Bt, K)
+    p = p_ref[...].astype(jnp.float32)          # (Bt, K)
+    n = n_ref[...].astype(jnp.float32)          # (Bt, n, K)
+    uu_ref[...] = jnp.sum(u * u, axis=-1, keepdims=True)       # (Bt, 1)
+    pp_ref[...] = jnp.sum(p * p, axis=-1, keepdims=True)
+    up_ref[...] = jnp.sum(u * p, axis=-1, keepdims=True)
+    nn_ref[...] = jnp.sum(n * n, axis=-1)                      # (Bt, n)
+    # MXU contraction: un[b, j] = sum_k u[b, k] n[b, j, k]
+    un_ref[...] = jax.lax.dot_general(
+        u, n, dimension_numbers=(((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def ccl_stats_pallas(user: jax.Array, pos: jax.Array, negs: jax.Array,
+                     *, block_b: int = 256, interpret: bool = False):
+    """user (B,K), pos (B,K), negs (B,n,K) -> (uu, pp, up) (B,1) and (nn, un) (B,n)."""
+    b, k = user.shape
+    n = negs.shape[1]
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    out_shape = [
+        jax.ShapeDtypeStruct((b, 1), jnp.float32),   # uu
+        jax.ShapeDtypeStruct((b, 1), jnp.float32),   # pp
+        jax.ShapeDtypeStruct((b, 1), jnp.float32),   # up
+        jax.ShapeDtypeStruct((b, n), jnp.float32),   # nn
+        jax.ShapeDtypeStruct((b, n), jnp.float32),   # un
+    ]
+    vec_spec = pl.BlockSpec((block_b, k), lambda i: (i, 0))
+    neg_spec = pl.BlockSpec((block_b, n, k), lambda i: (i, 0, 0))
+    scal_spec = pl.BlockSpec((block_b, 1), lambda i: (i, 0))
+    row_spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, neg_spec],
+        out_specs=[scal_spec, scal_spec, scal_spec, row_spec, row_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(user, pos, negs)
+
+
+def _bwd_kernel(mu, theta, inv_n_negs,
+                u_ref, p_ref, n_ref, uu_ref, pp_ref, up_ref, nn_ref, un_ref,
+                g_ref, du_ref, dp_ref, dn_ref):
+    """Analytic Eq. 4/5 backward from cached stats — zero recomputed dots.
+
+    g_ref: (1, 1) scalar cotangent of the mean loss (already / batch outside).
+    """
+    eps = 1e-12
+    u = u_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    negs = n_ref[...].astype(jnp.float32)
+    uu = uu_ref[...] + eps                      # (Bt, 1)
+    pp = pp_ref[...] + eps
+    up = up_ref[...]
+    nn = nn_ref[...] + eps                      # (Bt, n)
+    un = un_ref[...]
+    g = g_ref[0, 0]
+
+    inv_u = jax.lax.rsqrt(uu)
+    inv_p = jax.lax.rsqrt(pp)
+    inv_nn = jax.lax.rsqrt(nn)
+
+    neg_sim = un * inv_u * inv_nn
+    d_ps = -g                                               # d loss/d pos_sim (per row)
+    d_ns = (g * mu * inv_n_negs) * (neg_sim > theta).astype(jnp.float32)
+
+    wp = d_ps * inv_u * inv_p                               # (Bt, 1)
+    wn = d_ns * inv_u * inv_nn                              # (Bt, n)
+
+    coeff_u = (wp * up + jnp.sum(wn * un, axis=-1, keepdims=True)) / uu
+    # du = wp*p + wn @ negs - coeff_u * u      (MXU for the (Bt,n)x(n,K) part)
+    wn_negs = jax.lax.dot_general(
+        wn, negs, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    du_ref[...] = (wp * p + wn_negs - coeff_u * u).astype(du_ref.dtype)
+    dp_ref[...] = (wp * u - (wp * up / pp) * p).astype(dp_ref.dtype)
+    dn_ref[...] = (wn[..., None] * u[:, None, :]
+                   - (wn * un / nn)[..., None] * negs).astype(dn_ref.dtype)
+
+
+def ccl_bwd_pallas(user, pos, negs, uu, pp, up, nn, un, g_scalar,
+                   *, mu: float, theta: float,
+                   block_b: int = 256, interpret: bool = False):
+    """Fused backward tile kernel.  g_scalar: () cotangent already divided by B."""
+    b, k = user.shape
+    n = negs.shape[1]
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    vec_spec = pl.BlockSpec((block_b, k), lambda i: (i, 0))
+    neg_spec = pl.BlockSpec((block_b, n, k), lambda i: (i, 0, 0))
+    scal_spec = pl.BlockSpec((block_b, 1), lambda i: (i, 0))
+    row_spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+    g2d = g_scalar.reshape(1, 1).astype(jnp.float32)
+    kernel = functools.partial(_bwd_kernel, mu, theta, 1.0 / n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, neg_spec,
+                  scal_spec, scal_spec, scal_spec, row_spec, row_spec,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[vec_spec, vec_spec, neg_spec],
+        out_shape=[jax.ShapeDtypeStruct(user.shape, user.dtype),
+                   jax.ShapeDtypeStruct(pos.shape, pos.dtype),
+                   jax.ShapeDtypeStruct(negs.shape, negs.dtype)],
+        interpret=interpret,
+    )(user, pos, negs, uu, pp, up, nn, un, g2d)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused gather + SGD row update (paper §3.1 / §4.5).
+
+HEAT updates only the embedding rows touched by the current iteration.  The
+hot loop is irregular: gather row ``ids[i]`` from the HBM-resident table,
+fma with its gradient, write the new value.  This kernel implements the
+gather+fma with **scalar-prefetched row indices**: the ids land in SMEM before
+the grid runs, and each grid step's BlockSpec index_map uses ``ids[i]`` to
+stream exactly one table row HBM->VMEM — the TPU version of "each thread
+reads its corresponding embeddings" (§4.3), with the DMA engine playing the
+role of the cache-friendly access pattern.
+
+Conflict handling (§4.5): the wrapper in ops.py pre-reduces duplicate ids with
+a segment-sum before calling the kernel — the deterministic SPMD analogue of
+the paper's "alleviate read/write conflicts in shared memory".  After
+pre-reduction the final scatter of the produced rows is conflict-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_fma_kernel(ids_ref, table_ref, grad_ref, lr_ref, out_ref):
+    """out[i] = table[ids[i]] - lr * grad[i]  for the current grid row."""
+    del ids_ref  # consumed by the BlockSpec index_map (scalar prefetch)
+    row = table_ref[...].astype(jnp.float32)
+    g = grad_ref[...].astype(jnp.float32)
+    out_ref[...] = (row - lr_ref[0, 0] * g).astype(out_ref.dtype)
+
+
+def gather_fma_rows(table: jax.Array, ids: jax.Array, grads: jax.Array,
+                    lr, *, interpret: bool = False):
+    """Returns new values for rows ``ids``: table[ids] - lr*grads.
+
+    table: (R, K), ids: (B,) int32 (duplicates allowed — identical outputs
+    make the caller's scatter idempotent), grads: (B, K).  Grid over ids; the
+    table BlockSpec streams one row per grid step, selected by the prefetched
+    ids from SMEM.
+    """
+    b, k = grads.shape
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, ids: (ids[i], 0)),   # one table row
+            pl.BlockSpec((1, k), lambda i, ids: (i, 0)),        # its gradient
+            pl.BlockSpec((1, 1), lambda i, ids: (0, 0)),        # lr scalar
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_fma_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, k), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table, grads, lr_arr)

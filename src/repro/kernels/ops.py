@@ -1,0 +1,132 @@
+"""Jit-ready public wrappers around the Pallas kernels.
+
+Dispatch policy: on a TPU backend the kernels run compiled; everywhere else
+(this container is CPU-only) they run in ``interpret=True`` mode, which
+executes the kernel body in Python/XLA-CPU for correctness validation.
+``use_kernel=False`` falls back to the pure-jnp reference path (used both as
+the oracle and as the XLA-fusion baseline in benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ccl_similarity import ccl_bwd_pallas, ccl_stats_pallas
+from repro.kernels.embedding_update import gather_fma_rows
+from repro.kernels.flash_attention import flash_attention
+
+EPS = 1e-12
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, target: int) -> jax.Array:
+    pad = target - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+
+# ----------------------------------------------------------------------------
+# Fused CCL loss: stats kernel forward + analytic Eq.4/5 backward kernel.
+# ----------------------------------------------------------------------------
+
+def _ccl_fwd(user, pos, negs, mu, theta, block_b, interpret):
+    b = user.shape[0]
+    bb = min(block_b, b)
+    bp = ((b + bb - 1) // bb) * bb
+    u_p, p_p, n_p = _pad_rows(user, bp), _pad_rows(pos, bp), _pad_rows(negs, bp)
+    uu, pp, up, nn, un = ccl_stats_pallas(u_p, p_p, n_p, block_b=bb,
+                                          interpret=interpret)
+    inv_u = jax.lax.rsqrt(uu[:b] + EPS)
+    pos_sim = (up[:b] * inv_u * jax.lax.rsqrt(pp[:b] + EPS))[:, 0]
+    neg_sim = un[:b] * inv_u * jax.lax.rsqrt(nn[:b] + EPS)
+    neg_part = jnp.maximum(neg_sim - theta, 0.0)
+    loss = jnp.mean((1.0 - pos_sim)
+                    + (mu / negs.shape[1]) * jnp.sum(neg_part, axis=-1))
+    return loss.astype(user.dtype), (u_p, p_p, n_p, uu, pp, up, nn, un)
+
+
+def make_ccl_loss_pallas(mu: float = 1.0, theta: float = 0.0,
+                         block_b: int = 256, interpret: bool | None = None):
+    """Factory returning a fused-CCL loss fn with kernel fwd+bwd.
+
+    ``fn(user, pos, negs) -> scalar``; gradients flow to all three inputs via
+    the analytic backward kernel (residual reuse, §4.4).
+    """
+    interp = default_interpret() if interpret is None else interpret
+
+    @jax.custom_vjp
+    def fn(user, pos, negs):
+        loss, _ = _ccl_fwd(user, pos, negs, mu, theta, block_b, interp)
+        return loss
+
+    def fwd(user, pos, negs):
+        loss, res = _ccl_fwd(user, pos, negs, mu, theta, block_b, interp)
+        return loss, (res, user.shape[0])
+
+    def bwd(saved, g):
+        (u_p, p_p, n_p, uu, pp, up, nn, un), b = saved
+        bb = min(block_b, u_p.shape[0])
+        g_row = (g / b).astype(jnp.float32)
+        du, dp, dn = ccl_bwd_pallas(u_p, p_p, n_p, uu, pp, up, nn, un, g_row,
+                                    mu=mu, theta=theta, block_b=bb,
+                                    interpret=interp)
+        return du[:b], dp[:b], dn[:b]
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+# ----------------------------------------------------------------------------
+# Sparse embedding row update (§3.1/§4.5): pre-reduce -> gather+fma -> scatter.
+# ----------------------------------------------------------------------------
+
+def sparse_row_update(table: jax.Array, ids: jax.Array, grads: jax.Array, lr,
+                      *, use_kernel: bool = True,
+                      interpret: bool | None = None) -> jax.Array:
+    """table.at[ids].add(-lr*grads), HEAT-style.
+
+    ids (B,) may contain duplicates; they are pre-reduced with a sorted
+    segment-sum (deterministic conflict alleviation) so the kernel's output
+    rows scatter conflict-free.
+    """
+    ids = ids.reshape(-1)
+    grads = grads.reshape(-1, grads.shape[-1])
+    if not use_kernel:
+        return ref.rows_update_ref(table, ids, grads, lr)
+    interp = default_interpret() if interpret is None else interpret
+
+    b = ids.shape[0]
+    order = jnp.argsort(ids)
+    sids = ids[order]
+    sg = grads[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), sids[1:] != sids[:-1]])
+    seg = jnp.cumsum(first) - 1                       # segment index per row
+    reduced = jnp.zeros_like(sg).at[seg].add(sg)      # summed grads, rows 0..u-1
+    uids = jnp.zeros_like(sids).at[seg].max(sids)     # unique ids, rows 0..u-1
+    num_unique = seg[-1] + 1
+
+    new_rows = gather_fma_rows(table, uids, reduced, lr, interpret=interp)
+    # Scatter only the live rows; padding lanes are dropped out-of-bounds.
+    scatter_ids = jnp.where(jnp.arange(b) < num_unique, uids, table.shape[0])
+    return table.at[scatter_ids].set(new_rows, mode="drop")
+
+
+# ----------------------------------------------------------------------------
+# Attention dispatcher.
+# ----------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, use_kernel: bool = True,
+              block_q: int = 128, block_k: int = 128,
+              interpret: bool | None = None):
+    if not use_kernel:
+        return ref.attention_ref(q, k, v, causal=causal)
+    interp = default_interpret() if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interp)

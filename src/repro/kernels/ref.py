@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import ccl_loss_autodiff
+
+
+def ccl_stats_ref(user, pos, negs):
+    """Oracle for ccl_similarity.ccl_stats_pallas (float32 accumulation)."""
+    u = user.astype(jnp.float32)
+    p = pos.astype(jnp.float32)
+    n = negs.astype(jnp.float32)
+    uu = jnp.sum(u * u, axis=-1, keepdims=True)
+    pp = jnp.sum(p * p, axis=-1, keepdims=True)
+    up = jnp.sum(u * p, axis=-1, keepdims=True)
+    nn = jnp.sum(n * n, axis=-1)
+    un = jnp.einsum("bk,bnk->bn", u, n)
+    return uu, pp, up, nn, un
+
+
+def ccl_loss_ref(user, pos, negs, mu=1.0, theta=0.0):
+    """Oracle for the full fused loss: plain autodiff over the reference math."""
+    return ccl_loss_autodiff(user.astype(jnp.float32), pos.astype(jnp.float32),
+                             negs.astype(jnp.float32), mu, theta, "cosine")
+
+
+def ccl_grads_ref(user, pos, negs, mu=1.0, theta=0.0):
+    """Oracle gradients for the backward kernel (jax.grad of the reference)."""
+    g = jax.grad(ccl_loss_ref, argnums=(0, 1, 2))(user, pos, negs, mu, theta)
+    return tuple(x.astype(t.dtype) for x, t in zip(g, (user, pos, negs)))
+
+
+def rows_update_ref(table, ids, grads, lr):
+    """Oracle for embedding_update: sparse SGD row scatter (duplicates add)."""
+    return table.at[ids].add((-lr * grads).astype(table.dtype))
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """Oracle for flash_attention: full-materialization softmax attention.
+
+    q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq a multiple of Hkv (GQA).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,35 @@
+"""Production meshes (DESIGN.md §5).
+
+Defined as functions, not module constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+
+Topology: TPU v5e, 16x16 = 256 chips per pod; multi-pod = 2 pods = 512 chips.
+Axes: ``data`` (in-pod DP / ZeRO), ``model`` (TP/EP/vocab rows), ``pod``
+(cross-pod DP with compressed gradient all-reduce).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}, have {len(devices)} — "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices[:ndev])
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests / examples)."""
+    ndev = data * model
+    devices = jax.devices()[:ndev]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devices)

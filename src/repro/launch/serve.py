@@ -1,0 +1,70 @@
+"""Serving launcher: batched LM decoding loop (prefill -> decode_step*) or
+MF top-k recommendation serving.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+        --prompt-len 16 --decode-steps 8 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import lm
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opts = lm.TrainOptions(loss="softmax", remat="none",
+                           attn_chunk=min(1024, args.prompt_len))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.decode_steps
+
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (args.batch, args.prompt_len), 0,
+                                          cfg.vocab)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((args.batch, cfg.num_patches, cfg.d_model))
+
+    t0 = time.perf_counter()
+    logits, cache = lm.prefill(params, batch, cfg, opts)
+    cache = lm.pad_cache(cache, cfg, max_len)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{1e3 * t_prefill:.1f} ms")
+
+    decode = jax.jit(lambda c, t, p: lm.decode_step(params, c, t, p, cfg, opts))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.decode_steps):
+        logits_t, cache = decode(cache, tok, jnp.asarray(args.prompt_len + i,
+                                                         jnp.int32))
+        tok = jnp.argmax(logits_t[:, 0], -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = (time.perf_counter() - t0) / args.decode_steps
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decode: {1e3 * dt:.1f} ms/token/batch "
+          f"({1e6 * dt / args.batch:.0f} us/token/sequence)")
+    print(f"generated ids[0]: {list(map(int, out[0]))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every (arch x shape)
+cell — the dry-run contract: weak-type-correct, shardable, zero allocation.
+
+``step_arguments`` returns everything ``dryrun.lower_cell`` needs: the jitted
+step callable, abstract arguments, and the matching in_shardings tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.heat_head import HeadTileState
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.params import abstract, fit_spec, partition_specs
+from repro.optim.optimizers import Optimizer, get_optimizer
+
+
+def arch_optimizer(cfg: ArchConfig) -> Optimizer:
+    """Adafactor where full moments cannot fit (fsdp archs), else AdamW+ZeRO1."""
+    if cfg.fsdp:
+        return get_optimizer("adafactor", bf16_step=cfg.opt_bf16_step)
+    return get_optimizer("adamw", zero1=True, data_shards=shd.data_shards(),
+                         bf16_step=cfg.opt_bf16_step)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(abstract batch, sharding-spec batch) for a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = ("pod", "data")
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    spec = {"tokens": P(dp, None)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                               jnp.bfloat16)
+        spec["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model),
+                                                jnp.bfloat16)
+        spec["patches"] = P(dp, None, None)
+    return batch, spec
+
+
+def tile_abstract(cfg: ArchConfig):
+    if not (cfg.heat.enabled and cfg.heat.tile_size):
+        return None, None
+    tile = HeadTileState(jax.ShapeDtypeStruct((cfg.heat.tile_size,), jnp.int32),
+                         jax.ShapeDtypeStruct((), jnp.int32))
+    return tile, HeadTileState(P(), P())
+
+
+def resolve_tree(spec_tree, mesh: Mesh, abs_tree=None):
+    """Spec tree -> NamedSharding tree, divisibility-fitted when the matching
+    abstract tree (shapes) is provided (params.fit_spec policy)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(sp: P, aval=None):
+        if aval is not None:
+            sp = fit_spec(aval.shape, sp, mesh_shape)
+        else:
+            cleaned = []
+            for ax in sp:
+                if isinstance(ax, tuple):
+                    kept = tuple(a for a in ax if a in mesh_shape)
+                    cleaned.append(kept if kept else None)
+                elif isinstance(ax, str):
+                    cleaned.append(ax if ax in mesh_shape else None)
+                else:
+                    cleaned.append(None)
+            sp = P(*cleaned)
+        return NamedSharding(mesh, sp)
+
+    is_p = lambda x: isinstance(x, P)
+    if abs_tree is None:
+        return jax.tree.map(fix, spec_tree, is_leaf=is_p)
+    return jax.tree.map(lambda sp, av: fix(sp, av), spec_tree, abs_tree,
+                        is_leaf=is_p)
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """Everything needed to .lower() one (arch x shape x mesh) cell."""
+
+    fn: Any                # python callable
+    args: tuple            # abstract args
+    in_shardings: tuple
+    donate: tuple = ()
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               opts: Optional[lm.TrainOptions] = None,
+               lr: float = 1e-3) -> CellProgram:
+    """Construct the step program for a cell.  Must run inside
+    ``shd.use_mesh(mesh)`` so fsdp/zero sharding sees the right axis sizes."""
+    opts = opts or lm.TrainOptions()
+    defs = lm.model_defs(cfg)
+    params_abs = abstract(defs, jnp.bfloat16)
+    params_spec = partition_specs(defs)
+
+    if shape.kind == "train":
+        optimizer = arch_optimizer(cfg)
+        opt_defs = optimizer.state_defs(defs)
+        opt_abs = abstract(opt_defs, jnp.float32)
+        opt_spec = partition_specs(opt_defs)
+        batch_abs, batch_spec_tree = batch_specs(cfg, shape)
+        tile_abs, tile_spec = tile_abstract(cfg)
+        rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+        def train_step(params, opt_state, tile, batch, rng):
+            def loss_fn(p, t):
+                return lm.forward_train(p, batch, cfg, opts, rng, t)
+
+            (loss, new_tile), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tile_abs and tile)
+            new_p, new_o = optimizer.update(grads, opt_state, params, lr)
+            return new_p, new_o, new_tile, loss
+
+        args = (params_abs, opt_abs, tile_abs, batch_abs, rng_abs)
+        shards = (resolve_tree(params_spec, mesh, params_abs),
+                  resolve_tree(opt_spec, mesh, opt_abs),
+                  resolve_tree(tile_spec, mesh) if tile_spec else None,
+                  resolve_tree(batch_spec_tree, mesh, batch_abs),
+                  NamedSharding(mesh, P()))
+        return CellProgram(train_step, args, shards, donate=(0, 1))
+
+    if shape.kind == "prefill":
+        batch_abs, batch_spec_tree = batch_specs(cfg, shape)
+
+        def prefill_step(params, batch):
+            return lm.prefill(params, batch, cfg, opts)
+
+        return CellProgram(prefill_step, (params_abs, batch_abs),
+                           (resolve_tree(params_spec, mesh, params_abs),
+                            resolve_tree(batch_spec_tree, mesh, batch_abs)))
+
+    # decode: one new token against a seq_len-deep cache
+    cache_defs = lm.cache_defs(cfg, shape.global_batch, shape.seq_len)
+    cache_abs = abstract(cache_defs, jnp.bfloat16)
+    cache_spec = partition_specs(cache_defs)
+    token_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, token, pos):
+        return lm.decode_step(params, cache, token, pos, cfg, opts)
+
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    token_spec = NamedSharding(
+        mesh, fit_spec(token_abs.shape, P(("pod", "data"), None), mesh_shape))
+    return CellProgram(
+        serve_step, (params_abs, cache_abs, token_abs, pos_abs),
+        (resolve_tree(params_spec, mesh, params_abs),
+         resolve_tree(cache_spec, mesh, cache_abs),
+         token_spec, NamedSharding(mesh, P())),
+        donate=(1,))

@@ -1,0 +1,248 @@
+"""Transformer building blocks: RMSNorm, RoPE/M-RoPE, GQA attention, MLPs.
+
+Attention strategy (DESIGN.md §6): the TPU-target implementation is the
+Pallas flash kernel (repro.kernels.flash_attention).  For lowering on the
+host platform (dry-run) and for exact-memory accounting we use
+:func:`chunked_attention` — an unrolled-q-block online-softmax attention with
+the same FLOP count and O(block*S) live memory as the kernel, so 32k-token
+prefill fits HBM and ``cost_analysis`` sees honest (causally halved) FLOPs.
+Fully-masked chunk pairs are skipped at trace time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import batch_spec, constrain
+from repro.kernels import ops as kops
+from repro.models.config import ArchConfig
+from repro.models.params import ParamDef
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------------
+# Norm / MLP
+# ----------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def mlp_defs(cfg: ArchConfig, n_layers: int) -> dict:
+    """n_layers == 0 -> unstacked (shared-block) defs."""
+    d, f = cfg.d_model, cfg.d_ff
+    lead = (n_layers,) if n_layers else ()
+    sl = (None,) * len(lead)
+    if cfg.mlp_kind == "swiglu":
+        return {
+            "w_gate": ParamDef(lead + (d, f), P(*sl, None, "model"), "scaled_fan_in"),
+            "w_up": ParamDef(lead + (d, f), P(*sl, None, "model"), "scaled_fan_in"),
+            "w_down": ParamDef(lead + (f, d), P(*sl, "model", None), "scaled_fan_in"),
+        }
+    return {
+        "w_up": ParamDef(lead + (d, f), P(*sl, None, "model"), "scaled_fan_in"),
+        "w_down": ParamDef(lead + (f, d), P(*sl, "model", None), "scaled_fan_in"),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = constrain(h, batch_spec(None, "model"))
+    return h @ p["w_down"]
+
+
+# ----------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ----------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Qwen2-VL-style (t, h, w) split of the half-dim (16/24/24 at hd=128)."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                 mode: str = "standard") -> tuple[jax.Array, jax.Array]:
+    """positions: (B, S) int32 or (B, S, 3) for mrope -> cos/sin (B, S, half)."""
+    freqs = _rope_freqs(head_dim, theta)                       # (half,)
+    if mode == "mrope":
+        if positions.ndim == 2:                                # text-only input
+            positions = jnp.stack([positions] * 3, axis=-1)
+        secs = _mrope_sections(head_dim)
+        parts = jnp.split(freqs, (secs[0], secs[0] + secs[1]))
+        angles = [positions[..., i].astype(jnp.float32)[..., None] * parts[i][None, None]
+                  for i in range(3)]
+        ang = jnp.concatenate(angles, axis=-1)                 # (B, S, half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs[None, None]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, half) — rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------------
+
+def attn_defs(cfg: ArchConfig, n_layers: int, prefix_dims: tuple[int, ...] = ()) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L = (n_layers,) if n_layers else ()
+    lead = L + prefix_dims
+    spec_l = (None,) * len(lead)
+    m = "model" if cfg.attn_tp else None
+    return {
+        "wq": ParamDef(lead + (d, hq, hd), P(*spec_l, None, m, None), "scaled_fan_in"),
+        "wk": ParamDef(lead + (d, hkv, hd), P(*spec_l, None, m, None), "scaled_fan_in"),
+        "wv": ParamDef(lead + (d, hkv, hd), P(*spec_l, None, m, None), "scaled_fan_in"),
+        "wo": ParamDef(lead + (hq, hd, d), P(*spec_l, m, None, None), "scaled_fan_in"),
+    }
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int = 1024,
+                      probs_dtype=jnp.float32,
+                      acc_dtype=jnp.float32) -> jax.Array:
+    """Online-softmax attention, unrolled over q chunks (see module docstring).
+
+    q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd).  GQA KV is repeated up to the
+    full query-head count so the attention einsums shard *cleanly* on the
+    head dim (Hq divides the model axis where Hkv often does not — with the
+    split (hkv, g) layout GSPMD has to all-gather f32 probabilities, measured
+    at ~8.6 GB/step/device on granite-8b).  The Pallas kernel keeps the
+    no-repeat index-map trick; this XLA path trades a local KV broadcast for
+    zero attention collectives.
+
+    ``probs_dtype``: dtype of the probs @ V contraction operand — bf16 halves
+    the dominant materialized attention bytes (hillclimb knob, §Perf).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = constrain(k, batch_spec(None, "model", None))
+    v = constrain(v, batch_spec(None, "model", None))
+    scale = 1.0 / (hd ** 0.5)
+    chunk = min(chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    outs = []
+    for ci in range(n_chunks):
+        lo = ci * chunk
+        qc = q[:, lo:lo + chunk].astype(acc_dtype)                 # (b,c,h,hd)
+        kv_hi = min(lo + chunk, s) if causal else s
+        kc = k[:, :kv_hi].astype(acc_dtype)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qc, kc) * scale
+        if causal:
+            q_pos = lo + jnp.arange(qc.shape[1])
+            k_pos = jnp.arange(kv_hi)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None],
+                               logits, jnp.asarray(NEG_INF, logits.dtype))
+        probs = jax.nn.softmax(logits, axis=-1).astype(probs_dtype)
+        probs = constrain(probs, batch_spec("model", None, None))
+        oc = jnp.einsum("bhqk,bkhd->bqhd", probs,
+                        v[:, :kv_hi].astype(probs_dtype))
+        outs.append(oc.astype(q.dtype))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_max, Hkv, hd)
+    v: jax.Array        # (B, S_max, Hkv, hd)
+
+
+def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, Hq, hd); cache k/v (B, S, Hkv, hd); pos: () current length —
+    positions >= pos are masked out.
+    """
+    b, _, hq, hd = q.shape
+    hkv = cache.k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, cache.k.astype(jnp.float32))
+    logits = logits / (hd ** 0.5)
+    valid = jnp.arange(cache.k.shape[1]) <= pos
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, cache.v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def attn_apply(p: dict, x: jax.Array, cos: jax.Array, sin: jax.Array, cfg: ArchConfig,
+               *, causal: bool = True, cache: Optional[KVCache] = None,
+               pos: Optional[jax.Array] = None, attn_chunk: int = 1024,
+               probs_dtype=jnp.float32, acc_dtype=jnp.float32):
+    """Full attention block body (no residual/norm).  Returns (out, new_cache).
+
+    Train/prefill: cache is None -> chunked attention over the sequence.
+    Decode: cache given, x is (B, 1, d) -> in-place KV row write (the §4.5
+    sparse-update discipline applied to the cache) + single-token attention.
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, batch_spec(None, "model", None))
+    k = constrain(k, batch_spec(None, "model", None))
+
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=causal, chunk=attn_chunk,
+                                probs_dtype=probs_dtype, acc_dtype=acc_dtype)
+        new_cache = KVCache(k, v)      # fresh full-seq K/V (prefill collects it)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), pos, axis=1)
+        new_cache = KVCache(ck, cv)
+        out = decode_attention(q, new_cache, pos)
+    out = constrain(out, batch_spec(None, "model", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def cross_attn_apply(p: dict, x: jax.Array, memory_kv: tuple[jax.Array, jax.Array],
+                     cfg: ArchConfig):
+    """Cross-attention against precomputed encoder K/V (B, S_enc, Hkv, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = memory_kv
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) / (hd ** 0.5)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, s, hq, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encoder_kv(p: dict, memory: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    return k, v

@@ -1,0 +1,541 @@
+"""Unified LM over the assigned architecture pool (DESIGN.md §4).
+
+One param-def tree + three entry points per architecture family:
+
+  - ``forward_train``: tokens -> loss (full-softmax baseline head or the
+    HEAT sampled-CCL head — the paper's technique as a first-class feature),
+  - ``prefill``: tokens -> (last-position logits, primed decode cache),
+  - ``decode_step``: (cache, token, pos) -> (logits, cache) — one new token
+    against a ``seq_len``-deep cache (the ``decode_*`` / ``long_*`` shapes).
+
+Layer stacks run under ``lax.scan`` over stacked (L, ...) params (compile
+time and HLO size stay O(1) in depth; the roofline harness recovers true
+per-layer cost by L-extrapolation, DESIGN.md §6).  Non-homogeneous stacks
+scan over *groups*: hybrid = ``shared_attn_every`` mamba blocks + one
+shared-weight attention application (Zamba2 weight sharing); interleaved MoE
+= (moe_every-1) dense blocks + one MoE block (llama4) — grouping keeps the
+compiled FLOPs exactly equal to the active path (no masked dual compute).
+
+All three modes share one ``_run_stack`` driver; ``mode`` selects what the
+scan carries/collects (nothing / fresh KV / updated caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import samplers
+from repro.core.heat_head import HeatHeadConfig, full_softmax_loss, sampled_ccl_loss
+from repro.distributed.sharding import batch_spec, constrain, data_shards
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    KVCache,
+    attn_apply,
+    attn_defs,
+    cross_attn_apply,
+    encoder_kv,
+    mlp_apply,
+    mlp_defs,
+    rms_norm,
+    rope_cos_sin,
+)
+from repro.models.params import ParamDef, abstract, fsdpify, materialize
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    """Runtime knobs (the perf-hillclimbing surface, EXPERIMENTS.md §Perf)."""
+
+    loss: str = "heat"             # heat | softmax
+    remat: str = "full"            # full | none
+    attn_chunk: int = 1024
+    probs_dtype: Any = jnp.float32  # bf16 halves attention-intermediate bytes
+    attn_acc_dtype: Any = jnp.float32  # bf16 logits+softmax (flash-kernel proxy)
+    cache_dtype: Any = jnp.bfloat16
+    # Fully unroll layer scans: used by the roofline harness so the compiled
+    # HLO contains every layer and cost_analysis counts exactly (DESIGN.md §6).
+    scan_unroll: bool = False
+
+
+# ----------------------------------------------------------------------------
+# Param definitions
+# ----------------------------------------------------------------------------
+
+def _norm_def(n_layers: int, d: int) -> ParamDef:
+    lead = (n_layers,) if n_layers else ()
+    return ParamDef(lead + (d,), P(*(None,) * len(lead), None), "ones")
+
+
+def _dense_block_defs(cfg: ArchConfig, L: int) -> dict:
+    return {"ln1": _norm_def(L, cfg.d_model), "ln2": _norm_def(L, cfg.d_model),
+            "attn": attn_defs(cfg, L), "mlp": mlp_defs(cfg, L)}
+
+
+def _moe_block_defs(cfg: ArchConfig, L: int) -> dict:
+    return {"ln1": _norm_def(L, cfg.d_model), "ln2": _norm_def(L, cfg.d_model),
+            "attn": attn_defs(cfg, L), "moe": moe_mod.moe_defs(cfg, L)}
+
+
+def _mamba_block_defs(cfg: ArchConfig, L: int) -> dict:
+    return {"ln": _norm_def(L, cfg.d_model), "mamba": ssm_mod.mamba_defs(cfg, L)}
+
+
+def num_groups(cfg: ArchConfig) -> int:
+    """Scan length: layers are homogeneous unless grouped (hybrid / moe_every)."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.shared_attn_every
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        return cfg.n_layers // cfg.moe_every
+    return cfg.n_layers
+
+
+def layers_per_group(cfg: ArchConfig) -> int:
+    return cfg.n_layers // num_groups(cfg)
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    defs: dict = {
+        "embed": ParamDef((v, d), P("model", None), "normal", 0.02),
+        "final_norm": _norm_def(0, d),
+    }
+    if not cfg.tie_embeddings:
+        defs["out_embed"] = ParamDef((v, d), P("model", None), "normal", 0.02)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        defs["blocks"] = _dense_block_defs(cfg, cfg.n_layers)
+    elif fam == "moe":
+        if cfg.moe_every > 1:
+            g = num_groups(cfg)
+            defs["blocks"] = {
+                "dense": _dense_block_defs(cfg, g * (cfg.moe_every - 1)),
+                "moe_blk": _moe_block_defs(cfg, g),
+            }
+        else:
+            defs["blocks"] = _moe_block_defs(cfg, cfg.n_layers)
+    elif fam == "ssm":
+        defs["blocks"] = _mamba_block_defs(cfg, cfg.n_layers)
+    elif fam == "hybrid":
+        defs["blocks"] = _mamba_block_defs(cfg, cfg.n_layers)
+        defs["shared"] = {"ln1": _norm_def(0, d), "ln2": _norm_def(0, d),
+                          "attn": attn_defs(cfg, 0), "mlp": mlp_defs(cfg, 0)}
+    elif fam == "audio":
+        defs["encoder"] = _dense_block_defs(cfg, cfg.encoder_layers)
+        defs["enc_norm"] = _norm_def(0, d)
+        dec = _dense_block_defs(cfg, cfg.n_layers)
+        dec["ln_x"] = _norm_def(cfg.n_layers, d)
+        dec["cross"] = attn_defs(cfg, cfg.n_layers)
+        defs["blocks"] = dec
+    else:
+        raise ValueError(fam)
+
+    if cfg.fsdp:
+        defs = fsdpify(defs, data_shards())
+    return defs
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    return materialize(rng, model_defs(cfg), dtype)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return abstract(model_defs(cfg), dtype)
+
+
+# ----------------------------------------------------------------------------
+# Positions / RoPE
+# ----------------------------------------------------------------------------
+
+def _positions(cfg: ArchConfig, batch: int, seq: int, start: int | jax.Array = 0):
+    base = jnp.arange(seq, dtype=jnp.int32) + start
+    pos = jnp.broadcast_to(base[None], (batch, seq))
+    if cfg.rope_mode != "mrope":
+        return pos
+    if cfg.num_patches and seq > cfg.num_patches:
+        side = max(int(cfg.num_patches ** 0.5), 1)
+        pidx = jnp.arange(cfg.num_patches, dtype=jnp.int32)
+        patch3 = jnp.stack([jnp.zeros_like(pidx), pidx // side, pidx % side], -1)
+        text = jnp.arange(cfg.num_patches, seq, dtype=jnp.int32) + start
+        text3 = jnp.stack([text, text, text], -1)
+        pos3 = jnp.concatenate([patch3, text3], axis=0)
+    else:
+        pos3 = jnp.stack([base] * 3, -1)
+    return jnp.broadcast_to(pos3[None], (batch, seq, 3))
+
+
+# ----------------------------------------------------------------------------
+# Block bodies (shared by train / prefill / decode)
+# ----------------------------------------------------------------------------
+
+def _attn_block(lp, h, cos, sin, cfg, opts, *, moe: bool, cache=None, pos=None,
+                memory_kv=None, causal=True):
+    """Pre-norm attention + (MLP|MoE) [+ cross-attn].  Returns (h, kv_or_cache)."""
+    a, kv = attn_apply(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                       cos, sin, cfg, causal=causal, cache=cache, pos=pos,
+                       attn_chunk=opts.attn_chunk, probs_dtype=opts.probs_dtype,
+                       acc_dtype=opts.attn_acc_dtype)
+    h = constrain(h + a, batch_spec(None, None))
+    if memory_kv is not None:
+        x = cross_attn_apply(lp["cross"], rms_norm(h, lp["ln_x"], cfg.norm_eps),
+                             memory_kv, cfg)
+        h = h + x
+    hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    out = moe_mod.moe_apply(lp["moe"], hn, cfg) if moe else mlp_apply(lp["mlp"], hn, cfg)
+    return constrain(h + out, batch_spec(None, None)), kv
+
+
+def _mamba_block(lp, h, cfg, *, cache=None):
+    hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+    if cache is None:
+        y, mc = ssm_mod.mamba_apply(lp["mamba"], hn, cfg)
+    else:
+        y, mc = ssm_mod.mamba_decode(lp["mamba"], hn, cache, cfg)
+    return constrain(h + y, batch_spec(None, None)), mc
+
+
+def _maybe_remat(fn, opts: TrainOptions):
+    if opts.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def _scan(opts: TrainOptions, body, carry, xs):
+    return jax.lax.scan(body, carry, xs, unroll=True if opts.scan_unroll else 1)
+
+
+# ----------------------------------------------------------------------------
+# Stack driver
+# ----------------------------------------------------------------------------
+
+def _group_tree(tree, g: int):
+    return jax.tree.map(lambda a: a.reshape((g, -1) + a.shape[1:]), tree)
+
+
+def _run_stack(params, h, cfg: ArchConfig, opts: TrainOptions, mode: str,
+               cache=None, pos=None, memory=None):
+    """mode: train (returns h), prefill (returns h + collected caches),
+    decode (returns h + updated caches).  ``pos`` is the decode position."""
+    b, s = h.shape[0], h.shape[1]
+    fam = cfg.family
+    collect = mode != "train"
+    decode = mode == "decode"
+    cdt = opts.cache_dtype
+
+    if fam in ("dense", "vlm", "audio", "moe") or fam == "hybrid":
+        start = pos if decode else 0
+        rope_pos = _positions(cfg, b, s, start if decode else 0)
+        cos, sin = rope_cos_sin(rope_pos, cfg.head_dim, cfg.rope_theta,
+                                cfg.rope_mode if fam == "vlm" else "standard")
+
+    if fam in ("dense", "vlm"):
+        def body(carry, xs):
+            lp, kv_in = xs
+            hh, kv = _attn_block(lp, carry, cos, sin, cfg, opts, moe=False,
+                                 cache=kv_in if decode else None, pos=pos)
+            out = kv if decode else (
+                KVCache(kv.k.astype(cdt), kv.v.astype(cdt)) if collect else None)
+            return hh, out
+
+        xs = (params["blocks"], cache.kv if decode else _nones(cfg.n_layers))
+        h, kvs = _scan(opts, _maybe_remat(body, opts) if mode == "train" else body,
+                              h, xs)
+        new_cache = DecodeCache(kv=kvs) if collect else None
+
+    elif fam == "moe":
+        if cfg.moe_every > 1:
+            g = num_groups(cfg)
+            nd = cfg.moe_every - 1
+            blocks = {"dense": _group_tree(params["blocks"]["dense"], g),
+                      "moe_blk": params["blocks"]["moe_blk"]}
+
+            def body(carry, xs):
+                bp, kv_in = xs
+                hh = carry
+                kvs = []
+                for i in range(nd):
+                    lp = jax.tree.map(lambda a, i=i: a[i], bp["dense"])
+                    kin = (jax.tree.map(lambda a, i=i: a[i], kv_in[0])
+                           if decode else None)
+                    hh, kv = _attn_block(lp, hh, cos, sin, cfg, opts, moe=False,
+                                         cache=kin, pos=pos)
+                    kvs.append(kv)
+                kin = kv_in[1] if decode else None
+                hh, kv_m = _attn_block(bp["moe_blk"], hh, cos, sin, cfg, opts,
+                                       moe=True, cache=kin, pos=pos)
+                if not collect:
+                    return hh, None
+                stk = jax.tree.map(lambda *x: jnp.stack(x), *kvs)
+                if not decode:
+                    stk = jax.tree.map(lambda a: a.astype(cdt), stk)
+                    kv_m = jax.tree.map(lambda a: a.astype(cdt), kv_m)
+                return hh, (stk, kv_m)
+
+            if decode:
+                gkv = (_group_tree(cache.kv[0], g), cache.kv[1])
+                xs = (blocks, gkv)
+            else:
+                xs = (blocks, (_nones(g), _nones(g)))
+            h, kvs = _scan(opts, 
+                _maybe_remat(body, opts) if mode == "train" else body, h, xs)
+            if collect:
+                # Canonical layout: dense KV flat (G*(me-1), ...), moe KV (G, ...).
+                dense_kv = jax.tree.map(
+                    lambda a: a.reshape((g * nd,) + a.shape[2:]), kvs[0])
+                new_cache = DecodeCache(kv=(dense_kv, kvs[1]))
+            else:
+                new_cache = None
+        else:
+            def body(carry, xs):
+                lp, kv_in = xs
+                hh, kv = _attn_block(lp, carry, cos, sin, cfg, opts, moe=True,
+                                     cache=kv_in if decode else None, pos=pos)
+                out = kv if decode else (
+                    KVCache(kv.k.astype(cdt), kv.v.astype(cdt)) if collect else None)
+                return hh, out
+
+            xs = (params["blocks"], cache.kv if decode else _nones(cfg.n_layers))
+            h, kvs = _scan(opts, 
+                _maybe_remat(body, opts) if mode == "train" else body, h, xs)
+            new_cache = DecodeCache(kv=kvs) if collect else None
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            lp, mc_in = xs
+            hh, mc = _mamba_block(lp, carry, cfg, cache=mc_in if decode else None)
+            return hh, (mc if collect else None)
+
+        xs = (params["blocks"], cache.mamba if decode else _nones(cfg.n_layers))
+        h, mcs = _scan(opts, 
+            _maybe_remat(body, opts) if mode == "train" else body, h, xs)
+        new_cache = DecodeCache(mamba=mcs) if collect else None
+
+    elif fam == "hybrid":
+        k = cfg.shared_attn_every
+        g = cfg.n_layers // k
+        grouped = _group_tree(params["blocks"], g)
+        shared = params["shared"]
+
+        def body(carry, xs):
+            gp, mc_in, skv_in = xs
+            hh = carry
+            mcs = []
+            for i in range(k):
+                lp = jax.tree.map(lambda a, i=i: a[i], gp)
+                mcin = (jax.tree.map(lambda a, i=i: a[i], mc_in)
+                        if decode else None)
+                hh, mc = _mamba_block(lp, hh, cfg, cache=mcin)
+                mcs.append(mc)
+            a, skv = attn_apply(shared["attn"],
+                                rms_norm(hh, shared["ln1"], cfg.norm_eps),
+                                cos, sin, cfg, cache=skv_in if decode else None,
+                                pos=pos, attn_chunk=opts.attn_chunk,
+                                probs_dtype=opts.probs_dtype)
+            hh = constrain(hh + a, batch_spec(None, None))
+            m = mlp_apply(shared["mlp"], rms_norm(hh, shared["ln2"], cfg.norm_eps),
+                          cfg)
+            hh = constrain(hh + m, batch_spec(None, None))
+            if not collect:
+                return hh, None
+            stk = jax.tree.map(lambda *x: jnp.stack(x), *mcs)
+            if not decode:
+                skv = KVCache(skv.k.astype(cdt), skv.v.astype(cdt))
+            return hh, (stk, skv)
+
+        if decode:
+            xs = (grouped, _group_tree(cache.mamba, g), cache.shared_kv)
+        else:
+            xs = (grouped, _nones(g), _nones(g))
+        h, out = _scan(opts, 
+            _maybe_remat(body, opts) if mode == "train" else body, h, xs)
+        if collect:
+            gm, skv = out
+            mamba = jax.tree.map(lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), gm)
+            new_cache = DecodeCache(mamba=mamba, shared_kv=skv)
+        else:
+            new_cache = None
+
+    elif fam == "audio":
+        mem_bc = memory if not decode else None
+
+        def body(carry, xs):
+            lp, kv_in, cross_in = xs
+            if decode:
+                mem_kv = cross_in
+            else:
+                mem_kv = encoder_kv(lp["cross"], mem_bc)
+            hh, kv = _attn_block(lp, carry, cos, sin, cfg, opts, moe=False,
+                                 cache=kv_in if decode else None, pos=pos,
+                                 memory_kv=mem_kv)
+            if not collect:
+                return hh, None
+            if decode:
+                return hh, (kv, cross_in)
+            return hh, (KVCache(kv.k.astype(cdt), kv.v.astype(cdt)),
+                        jax.tree.map(lambda a: a.astype(cdt), mem_kv))
+
+        if decode:
+            xs = (params["blocks"], cache.kv, cache.cross_kv)
+        else:
+            xs = (params["blocks"], _nones(cfg.n_layers), _nones(cfg.n_layers))
+        h, out = _scan(opts, 
+            _maybe_remat(body, opts) if mode == "train" else body, h, xs)
+        new_cache = (DecodeCache(kv=out[0], cross_kv=out[1]) if collect else None)
+    else:
+        raise ValueError(fam)
+
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), new_cache
+
+
+def _nones(n: int):
+    return None
+
+
+# ----------------------------------------------------------------------------
+# Embedding / heads / public entry points
+# ----------------------------------------------------------------------------
+
+def embed_inputs(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    h = params["embed"][batch["tokens"]]
+    h = constrain(h, batch_spec(None, None))
+    if cfg.family == "vlm" and "patches" in batch:
+        p = batch["patches"].astype(h.dtype)
+        h = jnp.concatenate([p, h[:, p.shape[1]:]], axis=1)
+    return h
+
+
+def _out_table(params: dict, cfg: ArchConfig) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["out_embed"]
+
+
+def head_loss(params: dict, h: jax.Array, labels: jax.Array, cfg: ArchConfig,
+              opts: TrainOptions, rng: jax.Array,
+              tile: Optional[samplers.TileState], mask=None):
+    table = _out_table(params, cfg)
+    if opts.loss == "heat" and cfg.heat.enabled:
+        hcfg = HeatHeadConfig(num_negatives=cfg.heat.num_negatives,
+                              mu=cfg.heat.mu, theta=cfg.heat.theta,
+                              tile_size=cfg.heat.tile_size,
+                              refresh_interval=cfg.heat.refresh_interval)
+        return sampled_ccl_loss(h, labels, table, rng, hcfg, tile, mask)
+    return full_softmax_loss(h, labels, table, mask), tile
+
+
+def forward_train(params: dict, batch: dict, cfg: ArchConfig, opts: TrainOptions,
+                  rng: jax.Array, tile: Optional[samplers.TileState] = None):
+    """batch: tokens (B,S) [+ frames/patches].  Next-token objective."""
+    labels = batch["tokens"][:, 1:]
+    memory = (encode_audio(params, batch["frames"], cfg, opts)
+              if cfg.family == "audio" else None)
+    h = embed_inputs(params, batch, cfg)
+    h, _ = _run_stack(params, h, cfg, opts, "train", memory=memory)
+    return head_loss(params, h[:, :-1], labels, cfg, opts, rng, tile)
+
+
+def encode_audio(params: dict, frames: jax.Array, cfg: ArchConfig,
+                 opts: TrainOptions) -> jax.Array:
+    b, s, _ = frames.shape
+    cos, sin = rope_cos_sin(_positions(cfg, b, s), cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, lp):
+        hh, _ = _attn_block(lp, carry, cos, sin, cfg, opts, moe=False,
+                            causal=False)
+        return hh, None
+
+    h, _ = _scan(opts, _maybe_remat(body, opts), frames, params["encoder"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+class DecodeCache(NamedTuple):
+    """Family-polymorphic decode cache; unused members are () placeholders."""
+
+    kv: Any = ()          # KVCache (L,B,S,Hkv,hd) — attention families
+    mamba: Any = ()       # MambaCache (L,...) — ssm / hybrid
+    shared_kv: Any = ()   # KVCache (G,B,S,Hkv,hd) — hybrid shared blocks
+    cross_kv: Any = ()    # KVCache (L,B,Senc,Hkv,hd) — audio
+
+
+def cache_defs(cfg: ArchConfig, batch: int, seq: int) -> DecodeCache:
+    """ParamDef tree for the decode cache (-> abstract() or materialize())."""
+    hkv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    kv_spec = P(None, ("pod", "data"), "model", None, None)
+    kv = lambda n, s: KVCache(ParamDef((n, batch, s, hkv, hd), kv_spec, "zeros"),
+                              ParamDef((n, batch, s, hkv, hd), kv_spec, "zeros"))
+    if cfg.family in ("dense", "vlm"):
+        return DecodeCache(kv=kv(L, seq))
+    if cfg.family == "moe":
+        if cfg.moe_every > 1:
+            g = num_groups(cfg)
+            return DecodeCache(kv=(kv(g * (cfg.moe_every - 1), seq), kv(g, seq)))
+        return DecodeCache(kv=kv(L, seq))
+    if cfg.family == "ssm":
+        return DecodeCache(mamba=_mamba_cache_defs(cfg, L, batch))
+    if cfg.family == "hybrid":
+        g = L // cfg.shared_attn_every
+        return DecodeCache(mamba=_mamba_cache_defs(cfg, L, batch),
+                           shared_kv=kv(g, seq))
+    if cfg.family == "audio":
+        return DecodeCache(kv=kv(L, seq), cross_kv=kv(L, cfg.encoder_seq))
+    raise ValueError(cfg.family)
+
+
+def _mamba_cache_defs(cfg: ArchConfig, L: int, batch: int):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    conv_c = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return ssm_mod.MambaCache(
+        conv=ParamDef((L, batch, cfg.conv_width - 1, conv_c),
+                      P(None, ("pod", "data"), None, None), "zeros"),
+        state=ParamDef((L, batch, h, cfg.ssm_state, cfg.ssm_head_dim),
+                       P(None, ("pod", "data"), "model", None, None), "zeros"))
+
+
+def pad_cache(cache: DecodeCache, cfg: ArchConfig, max_len: int) -> DecodeCache:
+    """Grow KV caches' sequence dim to ``max_len`` (prefill -> decode handoff).
+
+    KV arrays are (L, B, S, Hkv, hd); mamba states are length-independent.
+    """
+
+    def pad_kv(kvc):
+        if kvc is None or (isinstance(kvc, tuple) and len(kvc) == 0):
+            return kvc
+        def pad(a):
+            extra = max_len - a.shape[2]
+            if extra <= 0:
+                return a
+            return jnp.pad(a, ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0)))
+        return jax.tree.map(pad, kvc)
+
+    kv = cache.kv
+    if isinstance(kv, tuple) and len(kv) == 2 and isinstance(kv[0], KVCache):
+        kv = (pad_kv(kv[0]), pad_kv(kv[1]))          # interleaved-MoE layout
+    else:
+        kv = pad_kv(kv)
+    return cache._replace(kv=kv, shared_kv=pad_kv(cache.shared_kv))
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig,
+            opts: TrainOptions = TrainOptions()):
+    """Full-prompt pass -> (last-position logits (B,V), primed cache)."""
+    memory = (encode_audio(params, batch["frames"], cfg, opts)
+              if cfg.family == "audio" else None)
+    h = embed_inputs(params, batch, cfg)
+    h, cache = _run_stack(params, h, cfg, opts, "prefill", memory=memory)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], _out_table(params, cfg))
+    return logits, cache
+
+
+def decode_step(params: dict, cache: DecodeCache, token: jax.Array,
+                pos: jax.Array, cfg: ArchConfig,
+                opts: TrainOptions = TrainOptions()):
+    """token (B,1) int32, pos () int32 -> (logits (B,1,V), new cache)."""
+    h = params["embed"][token]
+    h, new_cache = _run_stack(params, h, cfg, opts, "decode", cache=cache, pos=pos)
+    logits = jnp.einsum("btd,vd->btv", h, _out_table(params, cfg))
+    return logits, new_cache

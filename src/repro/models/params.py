@@ -1,0 +1,173 @@
+"""Parameter definition trees: one source of truth for shape, sharding, init.
+
+Models declare their parameters as trees of :class:`ParamDef`; from that one
+tree we derive
+  - ``materialize``: real arrays for CPU smoke tests / small-scale training,
+  - ``abstract``:    ShapeDtypeStructs for the multi-pod dry-run (no alloc),
+  - ``partition_specs``: the pjit in_shardings tree.
+
+Sharding axis conventions (DESIGN.md §5): ``model`` = tensor/expert axis,
+``data`` (+ ``pod``) = batch axis.  Specs are written with logical axis names
+and resolved against the active mesh (axes absent from the mesh are dropped,
+so the same config runs on a 1-device CPU mesh and the production pod).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: P = P()                 # logical partition spec
+    init: str = "normal"          # normal | zeros | ones | scaled_fan_in
+    scale: float = 0.02
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map(f: Callable[[ParamDef], Any], tree):
+    return jax.tree.map(f, tree, is_leaf=is_def)
+
+
+def materialize(rng: jax.Array, tree, dtype=jnp.float32):
+    """Real arrays (smoke tests / examples).  Deterministic per-leaf folding."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+
+    def make(d: ParamDef, key):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "scaled_fan_in":
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            return (jax.random.normal(key, d.shape, dtype)
+                    / jnp.asarray(math.sqrt(fan_in), dtype))
+        return jax.random.normal(key, d.shape, dtype) * jnp.asarray(d.scale, dtype)
+
+    return jax.tree.unflatten(treedef, [make(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract(tree, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for .lower() — zero device allocation."""
+    return _tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree)
+
+
+def fit_spec(shape: tuple[int, ...], spec: P,
+             mesh_shape: dict[str, int]) -> P:
+    """Make a logical spec legal for a concrete shape + mesh.
+
+    1. Axes absent from the mesh are dropped.
+    2. An axis whose dim size isn't divisible by the axis size is dropped
+       and *relocated* to the largest free dim that divides it (never dim 0
+       of stacked >=3D tensors — that is the scan layer dim, and slicing a
+       sharded leading dim inside lax.scan costs a collective per layer).
+       Relocation keeps memory sharded when the natural dim doesn't divide
+       (e.g. 15 query heads on a 16-way model axis -> shard d_model instead;
+       5 KV-head caches -> shard the sequence dim: DESIGN.md §5).
+    """
+    axes = [a for a in (list(spec) + [None] * (len(shape) - len(spec)))]
+    axes = axes[:len(shape)]
+
+    def axis_prod(ax) -> int:
+        if ax is None:
+            return 1
+        items = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in items:
+            n *= mesh_shape.get(a, 1)
+        return n
+
+    def present(ax):
+        if ax is None:
+            return None
+        items = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                      if a in mesh_shape)
+        if not items:
+            return None
+        return items if len(items) > 1 else items[0]
+
+    axes = [present(a) for a in axes]
+    dropped = []
+    for i, ax in enumerate(axes):
+        if ax is not None and shape[i] % axis_prod(ax) != 0:
+            dropped.append(ax)
+            axes[i] = None
+
+    # Protect dim 0 of stacked layer tensors (>=3D with an unsharded lead).
+    protect0 = len(shape) >= 3 and (len(spec) == 0 or list(spec)[0] is None)
+    start = 1 if protect0 else 0
+    for ax in dropped:
+        n = axis_prod(ax)
+        candidates = sorted(
+            (i for i in range(start, len(shape))
+             if axes[i] is None and shape[i] % n == 0 and shape[i] >= n),
+            key=lambda i: -shape[i])
+        if candidates:
+            axes[candidates[0]] = ax
+    return P(*axes)
+
+
+def partition_specs(tree, mesh_shape: dict[str, int] | None = None):
+    """PartitionSpec tree; with ``mesh_shape``, specs are fitted per-leaf
+    (divisibility-aware, see :func:`fit_spec`)."""
+
+    def resolve(d: ParamDef):
+        if mesh_shape is None:
+            return d.spec
+        return fit_spec(d.shape, d.spec, mesh_shape)
+
+    return _tree_map(resolve, tree)
+
+
+def fsdpify(tree, data_shards: int, axis: str = "data"):
+    """ZeRO-3/FSDP: additionally shard each large weight over the data axis.
+
+    Picks the last dimension whose spec is free and whose size divides
+    ``data_shards`` (never dim 0 — that is the scan-stacked layer dim, and
+    slicing a data-sharded leading dim inside ``lax.scan`` would force a
+    collective per layer).  Applied to archs whose params exceed one chip's
+    HBM even after model-axis sharding (llama4-maverick; DESIGN.md §5).
+    """
+
+    def maybe(d: ParamDef) -> ParamDef:
+        if len(d.shape) < 2:
+            return d
+        spec = list(d.spec) + [None] * (len(d.shape) - len(d.spec))
+        for dim in range(len(d.shape) - 1, 0, -1):
+            if spec[dim] is None and d.shape[dim] % data_shards == 0 \
+                    and d.shape[dim] >= data_shards:
+                spec[dim] = axis
+                return dataclasses.replace(d, spec=P(*spec))
+        return d
+
+    return _tree_map(maybe, tree)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_def)
+    return sum(math.prod(l.shape) for l in leaves)
+
+
+def bytes_per_device(tree, mesh_shape: dict[str, int], bytes_per_elem: int = 2) -> int:
+    """Parameter bytes landing on one device under the spec tree."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_def):
+        n = math.prod(leaf.shape)
+        shards = 1
+        for ax in leaf.spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shards *= mesh_shape.get(a, 1)
+        total += n * bytes_per_elem // max(shards, 1)
+    return total

@@ -1,0 +1,210 @@
+"""Mamba2 (state-space duality) blocks: chunked train scan + O(1) decode.
+
+SSD chunked algorithm (Dao & Gu, arXiv:2405.21060): the sequence is split
+into chunks of Q tokens; within a chunk the recurrence is evaluated as a
+masked attention-like quadratic (MXU-friendly), across chunks a tiny state
+recurrence carries (h, p, s) states.  The inter-chunk recurrence is unrolled
+(<= 128 steps of element-wise state updates) rather than ``lax.scan`` so XLA's
+cost model counts it exactly (DESIGN.md §6 — the L-extrapolation only handles
+the *layer* scan).
+
+Decode is the pure recurrence: state' = exp(dt*A) * state + dt * B ⊗ x — one
+token costs O(h*p*s), independent of context length, which is why the
+``long_500k`` cell runs on this family (DESIGN.md §4).
+
+Sharding: heads (and the d_inner channels that carry them) over ``model``;
+B/C/dt projections are small and replicated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamDef
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+
+
+def mamba_defs(cfg: ArchConfig, n_layers: int) -> dict:
+    d = cfg.d_model
+    d_in, h, _, g, s = _dims(cfg)
+    L, cw = n_layers, cfg.conv_width
+    lead = (L,) if L else ()
+    sl = (None,) * len(lead)
+    return {
+        "w_z": ParamDef(lead + (d, d_in), P(*sl, None, "model"), "scaled_fan_in"),
+        "w_x": ParamDef(lead + (d, d_in), P(*sl, None, "model"), "scaled_fan_in"),
+        "w_b": ParamDef(lead + (d, g * s), P(*sl, None, None), "scaled_fan_in"),
+        "w_c": ParamDef(lead + (d, g * s), P(*sl, None, None), "scaled_fan_in"),
+        "w_dt": ParamDef(lead + (d, h), P(*sl, None, "model"), "scaled_fan_in"),
+        "dt_bias": ParamDef(lead + (h,), P(*sl, "model"), "zeros"),
+        "conv_x": ParamDef(lead + (cw, d_in), P(*sl, None, "model"), "normal", 0.2),
+        "conv_b": ParamDef(lead + (cw, g * s), P(*sl, None, None), "normal", 0.2),
+        "conv_c": ParamDef(lead + (cw, g * s), P(*sl, None, None), "normal", 0.2),
+        "a_log": ParamDef(lead + (h,), P(*sl, "model"), "zeros"),
+        "d_skip": ParamDef(lead + (h,), P(*sl, "model"), "ones"),
+        "gate_norm": ParamDef(lead + (d_in,), P(*sl, "model"), "ones"),
+        "w_out": ParamDef(lead + (d_in, d), P(*sl, "model", None), "scaled_fan_in"),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width cw: u (B,S,C), w (cw,C)."""
+    cw = w.shape[0]
+    s = u.shape[1]
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + s] * w[i] for i in range(cw))
+    return y
+
+
+def _ssd_chunked(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
+                 chunk: int):
+    """Core SSD scan.  xdt (b,S,h,p) [x pre-multiplied by dt], dA (b,S,h),
+    B/C (b,S,h,s) [groups already broadcast].  Returns y (b,S,h,p)."""
+    b, s_len, h, p = xdt.shape
+    n_state = B.shape[-1]
+    q = min(chunk, s_len)
+    pad = (-s_len) % q
+    if pad:
+        # Zero-pad the tail: x=0 contributes nothing to states, dA=0 decays by
+        # exp(0)=1, so the final carried state is exact; padded y is sliced off.
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    true_len, s_len = s_len, s_len + pad
+    nc = s_len // q
+
+    xr = xdt.reshape(b, nc, q, h, p)
+    br = B.reshape(b, nc, q, h, n_state)
+    cr = C.reshape(b, nc, q, h, n_state)
+    dar = dA.reshape(b, nc, q, h).astype(jnp.float32)
+    cs = jnp.cumsum(dar, axis=2)                                  # (b,nc,q,h)
+
+    # Intra-chunk: masked quadratic form (the "duality" attention block).
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]            # (b,nc,i,j,h)
+    idx = jnp.arange(q)
+    mask = idx[:, None] >= idx[None, :]
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bnihs,bnjhs->bnijh", cr.astype(jnp.float32),
+                        br.astype(jnp.float32))
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores * decay,
+                         xr.astype(jnp.float32))
+
+    # Chunk-final states: S_n = sum_j exp(cs_last - cs_j) B_j x_j^T.
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)                    # (b,nc,q,h)
+    states = jnp.einsum("bnjhs,bnjh,bnjhp->bnhsp", br.astype(jnp.float32),
+                        decay_end, xr.astype(jnp.float32))        # (b,nc,h,s,p)
+
+    # Inter-chunk recurrence, unrolled (exact cost accounting).
+    total = jnp.exp(cs[:, :, -1, :])                              # (b,nc,h)
+    prev = jnp.zeros((b, h, n_state, p), jnp.float32)
+    starts = []
+    for n in range(nc):
+        starts.append(prev)
+        prev = prev * total[:, n][:, :, None, None] + states[:, n]
+    start_states = jnp.stack(starts, axis=1)                      # (b,nc,h,s,p)
+
+    y_inter = jnp.einsum("bnihs,bnih,bnhsp->bnihp", cr.astype(jnp.float32),
+                         jnp.exp(cs), start_states)
+    y = (y_intra + y_inter).reshape(b, s_len, h, p)[:, :true_len]
+    return y.astype(xdt.dtype), prev                               # final state
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array     # (B, cw-1, d_in + 2*g*s) — rolling conv inputs
+    state: jax.Array    # (B, h, s, p) — SSM state
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> MambaCache:
+    d_in, h, p, g, s = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * g * s), dtype),
+        state=jnp.zeros((batch, h, s, p), jnp.float32))
+
+
+def _project(p: dict, x: jax.Array, cfg: ArchConfig):
+    d_in, h, hd, g, s = _dims(cfg)
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    bb = x @ p["w_b"]
+    cc = x @ p["w_c"]
+    dt = jax.nn.softplus((x @ p["w_dt"]) + p["dt_bias"])
+    return z, xs, bb, cc, dt
+
+
+def _broadcast_groups(t: jax.Array, heads: int, groups: int, s: int) -> jax.Array:
+    """(B,S,g*s) -> (B,S,h,s) by repeating each group over its heads."""
+    b, sl, _ = t.shape
+    t = t.reshape(b, sl, groups, s)
+    rep = heads // groups
+    return jnp.repeat(t, rep, axis=2)
+
+
+def mamba_apply(p: dict, x: jax.Array, cfg: ArchConfig):
+    """Train/prefill path.  x (B,S,d) -> (y (B,S,d), final MambaCache)."""
+    d_in, h, hd, g, s = _dims(cfg)
+    b, sl, _ = x.shape
+    z, xs, bb, cc, dt = _project(p, x, cfg)
+
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, conv_w))
+    xs, bb, cc = jnp.split(conv_out, (d_in, d_in + g * s), axis=-1)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # (h,)
+    dA = dt.astype(jnp.float32) * a                                # (B,S,h)
+    xh = xs.reshape(b, sl, h, hd)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    bh = _broadcast_groups(bb, h, g, s)
+    ch = _broadcast_groups(cc, h, g, s)
+
+    y, final_state = _ssd_chunked(xdt, dA, bh, ch, cfg.ssm_chunk)
+    y = y + xh * p["d_skip"].reshape(1, 1, h, 1)
+    y = y.reshape(b, sl, d_in)
+    # Gated RMSNorm (Mamba2): norm(y * silu(z)) * scale
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps).astype(y.dtype)) * p["gate_norm"]
+    out = y @ p["w_out"]
+    cache = MambaCache(conv=conv_in[:, -(cfg.conv_width - 1):], state=final_state)
+    return out, cache
+
+
+def mamba_decode(p: dict, x: jax.Array, cache: MambaCache, cfg: ArchConfig):
+    """Single-token step.  x (B,1,d) -> (y (B,1,d), new cache)."""
+    d_in, h, hd, g, s = _dims(cfg)
+    b = x.shape[0]
+    z, xs, bb, cc, dt = _project(p, x, cfg)
+
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)               # (B,1,C)
+    window = jnp.concatenate([cache.conv, conv_in], axis=1)        # (B,cw,C)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, conv_w))[:, None]
+    xs, bb, cc = jnp.split(conv_out, (d_in, d_in + g * s), axis=-1)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0].astype(jnp.float32) * a)                 # (B,h)
+    xh = xs.reshape(b, h, hd)
+    bh = _broadcast_groups(bb, h, g, s)[:, 0]                      # (B,h,s)
+    ch = _broadcast_groups(cc, h, g, s)[:, 0]
+    dtx = (dt[:, 0, :, None] * xh).astype(jnp.float32)             # (B,h,p)
+
+    new_state = (cache.state * dA[:, :, None, None]
+                 + jnp.einsum("bhs,bhp->bhsp", bh.astype(jnp.float32), dtx))
+    y = jnp.einsum("bhs,bhsp->bhp", ch.astype(jnp.float32), new_state)
+    y = y.astype(x.dtype) + xh * p["d_skip"].reshape(1, h, 1)
+    y = y.reshape(b, 1, d_in)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps).astype(y.dtype)) * p["gate_norm"]
+    out = y @ p["w_out"]
+    return out, MambaCache(conv=window[:, 1:], state=new_state)

@@ -1,0 +1,59 @@
+"""Error-feedback int8 gradient compression for cross-pod all-reduce.
+
+Cross-pod ICI/DCN links are the scarcest bandwidth on a multi-pod mesh
+(DESIGN.md §5).  ``compressed_psum`` replaces a float32/bf16 ``psum`` over the
+``pod`` axis with: per-shard int8 quantization (per-row absmax scales) ->
+all_gather of (int8 payload, scales) -> local dequant-sum.  For a pod axis of
+size 2 this moves ~4x fewer bytes than a ring all-reduce of f32.
+
+Error feedback (Seide et al.): the quantization residual is added back into
+the next step's gradient, making the compression unbiased over time; tests
+verify convergence parity on a quadratic problem.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: jax.Array           # residual feedback buffer, same shape as grad
+
+
+def compression_init(grad_like: jax.Array) -> CompressionState:
+    return CompressionState(jnp.zeros_like(grad_like, dtype=jnp.float32))
+
+
+def quantize_int8(x: jax.Array):
+    """Row-wise absmax int8 quantization.  x: (..., K) -> (int8, scales)."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = (absmax / 127.0).clip(1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grad: jax.Array, state: CompressionState):
+    """Returns (int8 payload, scales, new_state).  grad is f32/bf16."""
+    g = grad.astype(jnp.float32) + state.error
+    q, scale = quantize_int8(g)
+    deq = dequantize_int8(q, scale)
+    return q, scale, CompressionState(g - deq)
+
+
+def compressed_psum(grad: jax.Array, state: CompressionState, axis_name: str):
+    """Error-feedback compressed all-reduce over ``axis_name``.
+
+    Must run inside shard_map/pmap context providing ``axis_name``.  The
+    all_gather moves int8 (+ tiny f32 scales); the sum happens locally in f32.
+    """
+    q, scale, new_state = compress_with_feedback(grad, state)
+    qs = jax.lax.all_gather(q, axis_name)            # (S, ..., K) int8
+    ss = jax.lax.all_gather(scale, axis_name)
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    return total, new_state

@@ -1,0 +1,210 @@
+"""Optimizers: SGD(+momentum), AdamW, Adafactor — dependency-free, pytree-based.
+
+Each optimizer is a (init, update) pair over arbitrary pytrees.  State-spec
+trees mirror the parameter ParamDef tree so optimizer state shards like its
+parameter; ``zero1=True`` additionally shards Adam moments over the data axis
+(ZeRO-1: each data shard owns a slice of the optimizer state; GSPMD
+materializes the update with the corresponding gathers — DESIGN.md §5).
+
+Adafactor (factored second moment) is the default for llama4-maverick-400b:
+full Adam moments would not fit 16 GB/chip even at (model x data) sharding.
+
+Leaf-wise moment bundles: per-parameter state lives in a small NamedTuple at
+the same tree position as its parameter, so multi-tree ``jax.tree.map`` never
+has to reconcile mismatched None-structures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDef, fsdpify, is_def
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Any                      # params -> state
+    update: Any                    # (grads, state, params, lr) -> (new_p, new_s)
+    state_defs: Any                # ParamDef tree -> state ParamDef tree
+
+
+class OptState(NamedTuple):
+    moments: Any                   # tree parallel to params (leaf bundles)
+    count: jax.Array               # () int32 step counter
+
+
+# ----------------------------------------------------------------------------
+# SGD (+ momentum)
+# ----------------------------------------------------------------------------
+
+def make_sgd(momentum: float = 0.0) -> Optimizer:
+    use_m = momentum > 0.0
+
+    def init(params):
+        m = jax.tree.map(jnp.zeros_like, params) if use_m else None
+        return OptState(m, jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        if use_m:
+            new_m = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                                 state.moments, grads)
+            new_p = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype),
+                                 params, new_m)
+            return new_p, OptState(new_m, state.count + 1)
+        new_p = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                             params, grads)
+        return new_p, OptState(None, state.count + 1)
+
+    def state_defs(defs):
+        m = jax.tree.map(lambda d: dataclasses.replace(d, init="zeros"),
+                         defs, is_leaf=is_def) if use_m else None
+        return OptState(m, ParamDef((), init="zeros"))
+
+    return Optimizer("sgd", init, update, state_defs)
+
+
+# ----------------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------------
+
+class AdamMoments(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def make_adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+               weight_decay: float = 0.0, zero1: bool = False,
+               data_shards: int = 1, bf16_step: bool = False) -> Optimizer:
+    def init(params):
+        z = lambda p: AdamMoments(jnp.zeros(p.shape, jnp.float32),
+                                  jnp.zeros(p.shape, jnp.float32))
+        return OptState(jax.tree.map(z, params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, mom: AdamMoments):
+            g = g.astype(jnp.float32)
+            m = b1 * mom.mu + (1 - b1) * g
+            v = b2 * mom.nu + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            if bf16_step:
+                # ZeRO-1: the sharded step is what gets all-gathered back to
+                # the replicated params — bf16 halves that collective.
+                step = step.astype(jnp.bfloat16)
+            return (p - lr * step).astype(p.dtype), AdamMoments(m, v)
+
+        out = jax.tree.map(upd, params, grads, state.moments)
+        leaf = lambda x: isinstance(x, tuple) and len(x) == 2 \
+            and isinstance(x[1], AdamMoments)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=leaf)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=leaf)
+        return new_p, OptState(new_m, c)
+
+    def state_defs(defs):
+        def mom(d: ParamDef):
+            dz = dataclasses.replace(d, init="zeros")
+            return AdamMoments(dz, dz)
+
+        m = jax.tree.map(mom, defs, is_leaf=is_def)
+        if zero1 and data_shards > 1:
+            m = fsdpify(m, data_shards)
+        return OptState(m, ParamDef((), init="zeros"))
+
+    return Optimizer("adamw", init, update, state_defs)
+
+
+# ----------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moment.
+# ----------------------------------------------------------------------------
+
+class FactoredMoment(NamedTuple):
+    vr: Optional[Any]     # row second-moment (last dim reduced)
+    vc: Optional[Any]     # col second-moment (second-to-last dim reduced)
+    v: Optional[Any]      # full second moment for non-factorable leaves
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def make_adafactor(decay: float = 0.99, eps: float = 1e-30,
+                   clip_threshold: float = 1.0,
+                   bf16_step: bool = False) -> Optimizer:
+    def init(params):
+        def fm(p):
+            if _factorable(p.shape):
+                return FactoredMoment(jnp.zeros(p.shape[:-1], jnp.float32),
+                                      jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                                jnp.float32), None)
+            return FactoredMoment(None, None, jnp.zeros(p.shape, jnp.float32))
+
+        return OptState(jax.tree.map(fm, params), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+
+        def upd(p, g, fm: FactoredMoment):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if fm.v is None:
+                vr = decay * fm.vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * fm.vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.mean(vr, axis=-1, keepdims=True).clip(1e-30)
+                denom = jnp.sqrt(r[..., None] * vc[..., None, :])
+                new_fm = FactoredMoment(vr, vc, None)
+            else:
+                v = decay * fm.v + (1 - decay) * g2
+                denom = jnp.sqrt(v)
+                new_fm = FactoredMoment(None, None, v)
+            step = g / denom.clip(1e-30)
+            norm = jnp.sqrt(jnp.mean(step * step)).clip(1.0 / clip_threshold)
+            step = step / (norm * clip_threshold)
+            if bf16_step:
+                step = step.astype(jnp.bfloat16)
+            return (p - lr * step).astype(p.dtype), new_fm
+
+        out = jax.tree.map(upd, params, grads, state.moments)
+        leaf = lambda x: isinstance(x, tuple) and len(x) == 2 \
+            and isinstance(x[1], FactoredMoment)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=leaf)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=leaf)
+        return new_p, OptState(new_m, c)
+
+    def state_defs(defs):
+        def fm(d: ParamDef):
+            if _factorable(d.shape):
+                spec = list(d.spec) + [None] * (len(d.shape) - len(d.spec))
+                return FactoredMoment(
+                    dataclasses.replace(d, shape=d.shape[:-1],
+                                        spec=P(*spec[:-1]), init="zeros"),
+                    dataclasses.replace(d, shape=d.shape[:-2] + d.shape[-1:],
+                                        spec=P(*(spec[:-2] + spec[-1:])),
+                                        init="zeros"),
+                    None)
+            return FactoredMoment(None, None,
+                                  dataclasses.replace(d, init="zeros"))
+
+        return OptState(jax.tree.map(fm, defs, is_leaf=is_def),
+                        ParamDef((), init="zeros"))
+
+    return Optimizer("adafactor", init, update, state_defs)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return make_sgd(**kw)
+    if name == "adamw":
+        return make_adamw(**kw)
+    if name == "adafactor":
+        return make_adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,200 @@
+"""Training loops with checkpoint/restart, failure injection, and elastic
+resume — for both the LM zoo and the paper's own MF-CF model.
+
+Fault-tolerance model (DESIGN.md §5):
+  - step-granular atomic checkpoints (train/checkpoint.py), data batches are
+    pure functions of (seed, step) -> bit-exact resume;
+  - ``fail_at_step`` injects a crash (tests + demos); the driver loop catches
+    ``SimulatedFailure``/restart-able errors, restores the latest checkpoint
+    and continues — the single-process stand-in for a pod-scheduler restart;
+  - elastic: restore() lays checkpoints out on whatever mesh is active now;
+  - stragglers: synchronous SPMD has no per-step stragglers inside a pod; the
+    deferred aggregator sync (m-step flush) and the compressed cross-pod
+    psum bound the damage of slow links; a hard-timeout -> restart policy is
+    the cluster-level fallback (documented, not simulatable single-process).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heat_head, mf
+from repro.data import pipeline
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.optim.optimizers import Optimizer, get_optimizer
+from repro.train import checkpoint as ckpt
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests / fault-tolerance demos)."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    lr: float = 1e-3
+    batch_size: int = 8
+    seq_len: int = 64
+    seed: int = 0
+    optimizer: str = "adamw"
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    fail_at_step: Optional[int] = None      # failure injection
+    max_restarts: int = 2
+    grad_accum: int = 1
+    fixed_batch: bool = False               # overfit one batch (tests/demos)
+
+
+class LMTrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    tile: Any                   # HeadTileState or None
+    step: jax.Array
+
+
+def make_lm_train_step(cfg: ArchConfig, opts: lm.TrainOptions, optimizer: Optimizer,
+                       lr: float, grad_accum: int = 1) -> Callable:
+    """Returns jitted (state, batch, rng) -> (state, loss).
+
+    grad_accum > 1 runs a microbatch scan, accumulating gradients — the
+    deferred-synchronization discipline of paper §4.5 applied to the dense
+    parameters (one optimizer update / all-reduce per accumulation window).
+    """
+
+    def loss_fn(params, batch, rng, tile):
+        loss, new_tile = lm.forward_train(params, batch, cfg, opts, rng, tile)
+        return loss, new_tile
+
+    def one_micro(params, tile, batch, rng):
+        (loss, new_tile), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, rng, tile)
+        return loss, grads, new_tile
+
+    def step_fn(state: LMTrainState, batch, rng):
+        if grad_accum == 1:
+            loss, grads, tile = one_micro(state.params, state.tile, batch, rng)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, -1) + x.shape[1:]), batch)
+
+            def body(carry, xs):
+                g_sum, tile_c, i = carry
+                mb = xs
+                l, g, tile_c = one_micro(state.params, tile_c, mb,
+                                         jax.random.fold_in(rng, i))
+                g_sum = jax.tree.map(jnp.add, g_sum, g)
+                return (g_sum, tile_c, i + 1), l
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (g_sum, tile, _), losses = jax.lax.scan(
+                body, (zeros, state.tile, jnp.zeros((), jnp.int32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, g_sum)
+            loss = jnp.mean(losses)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params, lr)
+        return LMTrainState(new_params, new_opt, tile, state.step + 1), loss
+
+    return jax.jit(step_fn, donate_argnums=(0,))
+
+
+def init_lm_state(rng: jax.Array, cfg: ArchConfig, opts: lm.TrainOptions,
+                  optimizer: Optimizer, dtype=jnp.float32) -> LMTrainState:
+    kp, kt = jax.random.split(rng)
+    params = lm.init_params(kp, cfg, dtype)
+    tile = (heat_head.head_tile_init(kt, cfg.vocab, cfg.heat.tile_size)
+            if (opts.loss == "heat" and cfg.heat.enabled and cfg.heat.tile_size)
+            else None)
+    return LMTrainState(params, optimizer.init(params), tile,
+                        jnp.zeros((), jnp.int32))
+
+
+def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
+             extras_spec: Optional[dict] = None,
+             log: Callable[[str], None] = print) -> tuple[LMTrainState, list]:
+    """End-to-end LM training driver with restart-on-failure."""
+    optimizer = get_optimizer(tcfg.optimizer)
+    step_fn = make_lm_train_step(cfg, opts, optimizer, tcfg.lr, tcfg.grad_accum)
+    rng = jax.random.PRNGKey(tcfg.seed)
+    state = init_lm_state(rng, cfg, opts, optimizer)
+    start = 0
+
+    if tcfg.ckpt_dir and (s := ckpt.latest_step(tcfg.ckpt_dir)) is not None:
+        state, start, _ = ckpt.restore(tcfg.ckpt_dir, state)
+        log(f"[trainer] resumed from step {start}")
+
+    restarts = 0
+    losses = []
+    step = start
+    while step < tcfg.steps:
+        try:
+            batch = pipeline.lm_batch(0 if tcfg.fixed_batch else step,
+                                      tcfg.batch_size, tcfg.seq_len,
+                                      cfg.vocab, tcfg.seed, extras_spec)
+            if tcfg.fail_at_step is not None and step == tcfg.fail_at_step \
+                    and restarts == 0:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            state, loss = step_fn(state, batch, jax.random.fold_in(rng, step))
+            losses.append(float(loss))
+            if tcfg.log_every and step % tcfg.log_every == 0:
+                log(f"[trainer] step {step} loss {float(loss):.4f}")
+            step += 1
+            if tcfg.ckpt_dir and step % tcfg.ckpt_every == 0:
+                ckpt.save(tcfg.ckpt_dir, step, state)
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > tcfg.max_restarts or not tcfg.ckpt_dir:
+                raise
+            log(f"[trainer] {e} -> restoring latest checkpoint")
+            if ckpt.latest_step(tcfg.ckpt_dir) is not None:
+                state, step, _ = ckpt.restore(tcfg.ckpt_dir, state)
+            else:
+                state = init_lm_state(rng, cfg, opts, optimizer)
+                step = 0
+    return state, losses
+
+
+# ----------------------------------------------------------------------------
+# MF / CF trainer (the paper's own training loop)
+# ----------------------------------------------------------------------------
+
+def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
+             batch_size: int = 256, seed: int = 0, loss_impl: str = "fused",
+             sparse_update: bool = True, ckpt_dir: Optional[str] = None,
+             ckpt_every: int = 200, fail_at_step: Optional[int] = None,
+             log: Callable[[str], None] = print):
+    """HEAT CF training (Fig. 3 loop) with the same fault-tolerance contract."""
+    rng = jax.random.PRNGKey(seed)
+    state = mf.init_mf(rng, cfg)
+    step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, loss_impl=loss_impl,
+                              sparse_update=sparse_update), donate_argnums=(0,))
+    start = 0
+    if ckpt_dir and (s := ckpt.latest_step(ckpt_dir)) is not None:
+        state, start, _ = ckpt.restore(ckpt_dir, state)
+        log(f"[mf] resumed from step {start}")
+
+    losses = []
+    step, restarts = start, 0
+    while step < steps:
+        try:
+            if fail_at_step is not None and step == fail_at_step and restarts == 0:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            batch = pipeline.cf_batch(ds, step, batch_size, cfg.history_len, seed)
+            state, loss = step_fn(state, batch, jax.random.fold_in(rng, step))
+            losses.append(float(loss))
+            step += 1
+            if ckpt_dir and step % ckpt_every == 0:
+                ckpt.save(ckpt_dir, step, state)
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > 2 or not ckpt_dir:
+                raise
+            log(f"[mf] {e} -> restoring")
+            state, step, _ = ckpt.restore(ckpt_dir, state)
+    return state, losses

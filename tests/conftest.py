@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — tests run on the
+single real CPU device; multi-device lowering is exercised via subprocesses
+(tests/test_distributed.py) so the main process keeps a 1-device platform."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)

@@ -1,0 +1,38 @@
+"""Ranking metrics (Recall@K / NDCG@K) against hand-computed values."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import evaluate_ranking, ndcg_at_k, recall_at_k, topk_exclude_train
+
+
+def test_recall_hand_example():
+    # user 0: test items {1, 3}; topk = [1, 2] -> recall 1/2
+    # user 1: test items {0};    topk = [2, 3] -> recall 0
+    test_mask = jnp.array([[0, 1, 0, 1], [1, 0, 0, 0]], bool)
+    topk = jnp.array([[1, 2], [2, 3]])
+    np.testing.assert_allclose(recall_at_k(topk, test_mask), (0.5 + 0.0) / 2)
+
+
+def test_ndcg_hand_example():
+    # user 0: hits at rank 1 only, 2 positives -> dcg = 1/log2(2) = 1,
+    # idcg = 1/log2(2) + 1/log2(3); ndcg = 1 / (1 + 0.6309) = 0.6131
+    test_mask = jnp.array([[0, 1, 0, 1]], bool)
+    topk = jnp.array([[1, 2]])
+    want = 1.0 / (1.0 + 1.0 / np.log2(3.0))
+    np.testing.assert_allclose(ndcg_at_k(topk, test_mask), want, rtol=1e-5)
+
+
+def test_topk_excludes_training_items():
+    scores = jnp.arange(8.0)[None, :]                 # best item = 7
+    train_mask = jnp.zeros((1, 8), bool).at[0, 7].set(True)
+    ids = topk_exclude_train(scores, train_mask, 2)
+    assert 7 not in np.asarray(ids)
+    np.testing.assert_array_equal(np.asarray(ids[0]), [6, 5])
+
+
+def test_evaluate_ranking_keys():
+    m = evaluate_ranking(jnp.ones((2, 30)), jnp.zeros((2, 30), bool),
+                         jnp.zeros((2, 30), bool).at[0, 3].set(True), k=20)
+    assert set(m) == {"recall@20", "ndcg@20"}
+    # perfect-score sanity: only item 3 relevant, it is in any top-20
+    assert float(m["recall@20"]) == 1.0

@@ -1,0 +1,89 @@
+"""Random-tiling sampler properties (paper §4.2) — hypothesis-driven."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import samplers
+from repro.core.tiling import tune_tiling
+
+
+@settings(deadline=None, max_examples=20)
+@given(num_items=st.integers(64, 512), tile=st.integers(4, 32),
+       n=st.integers(1, 16), seed=st.integers(0, 1000))
+def test_tile_sample_within_tile(num_items, tile, n, seed):
+    """Sampled negatives always come from the cached tile's ids."""
+    rng = jax.random.PRNGKey(seed)
+    table = jnp.arange(num_items * 4, dtype=jnp.float32).reshape(num_items, 4)
+    state = samplers.tile_init(rng, table, tile)
+    ids, emb, local = samplers.tile_sample(state, jax.random.fold_in(rng, 1),
+                                           (8, n))
+    assert set(np.array(ids).ravel()) <= set(np.array(state.tile_ids))
+    # embeddings come from the tile copy, matching their global rows
+    np.testing.assert_allclose(emb, table[ids])
+    assert np.all(np.array(local) < tile)
+
+
+@settings(deadline=None, max_examples=10)
+@given(interval=st.integers(2, 10), steps=st.integers(1, 25))
+def test_refresh_schedule(interval, steps):
+    """Tile refreshes exactly every ``interval`` steps (step counter resets)."""
+    rng = jax.random.PRNGKey(0)
+    table = jnp.ones((128, 4))
+    state = samplers.tile_init(rng, table, 8)
+    for i in range(steps):
+        state = samplers.tile_refresh(state, jax.random.fold_in(rng, i),
+                                      table, interval)
+    assert int(state.step) == steps % interval
+
+
+def test_refresh_enlarges_sampling_space():
+    """Across refreshes the union of sampled ids approaches the item space."""
+    rng = jax.random.PRNGKey(0)
+    num_items = 256
+    table = jnp.zeros((num_items, 4))
+    state = samplers.tile_init(rng, table, 32)
+    seen = set(np.array(state.tile_ids))
+    for i in range(40):
+        state = samplers.tile_refresh(state, jax.random.fold_in(rng, i), table,
+                                      refresh_interval=2)
+        seen |= set(np.array(state.tile_ids))
+    assert len(seen) > 200        # sampling space ~ M/N2 * N1 >> N1
+
+
+def test_uniform_sampler_bounds():
+    ids = samplers.sample_uniform(jax.random.PRNGKey(0), 1000, (64, 8))
+    assert int(ids.min()) >= 0 and int(ids.max()) < 1000
+
+
+@settings(deadline=None, max_examples=15)
+@given(items=st.integers(1000, 200000), iters=st.integers(1000, 1000000),
+       dim=st.sampled_from([64, 128]), shards=st.sampled_from([1, 4, 16]))
+def test_algorithm1_invariants(items, iters, dim, shards):
+    """Algorithm 1: N1 <= N2 <= M, tile fits the VMEM budget, plan is sane."""
+    plan = tune_tiling(items, iters, 64, dim, model_shards=shards)
+    assert 1 <= plan.tile_size <= plan.refresh_interval <= iters
+    assert plan.tile_size * dim * 4 <= 96 * 2 ** 20
+    assert plan.predicted_speedup >= 0.99
+    # sampling space never exceeds what M iterations can visit
+    assert plan.sampling_space <= iters * plan.tile_size
+
+
+def test_algorithm1_more_shards_more_speedup():
+    """Remote rows cost more on bigger model meshes -> tiling helps more."""
+    base = dict(num_items=100000, total_iterations=10_000_000,
+                num_negatives=64, emb_dim=128)
+    s1 = tune_tiling(model_shards=1, **base).predicted_speedup
+    s16 = tune_tiling(model_shards=16, **base).predicted_speedup
+    assert s16 >= s1
+
+
+def test_sharded_tiles_are_independent():
+    """Per-shard tiles (paper: per-thread tiles) hold different ids."""
+    rng = jax.random.PRNGKey(3)
+    table = jnp.zeros((10_000, 8))
+    st8 = samplers.sharded_tile_init(rng, table, 64, num_shards=8)
+    ids = np.array(st8.tile_ids)
+    assert st8.tile_emb.shape == (8, 64, 8)
+    assert len({tuple(row) for row in ids}) > 1

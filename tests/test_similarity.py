@@ -1,0 +1,69 @@
+"""Similarity-layer invariants (hypothesis property tests, paper §4.3/§4.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.similarity import (
+    cosine_from_stats,
+    cosine_similarity,
+    pair_stats,
+    simplex_bmm_similarity,
+)
+
+
+def _data(b, n, k, seed):
+    r = jax.random.PRNGKey(seed)
+    return (jax.random.normal(r, (b, k)),
+            jax.random.normal(jax.random.fold_in(r, 1), (b, k)),
+            jax.random.normal(jax.random.fold_in(r, 2), (b, n, k)))
+
+
+@settings(deadline=None, max_examples=20)
+@given(b=st.integers(1, 16), n=st.integers(1, 8), k=st.integers(2, 32),
+       seed=st.integers(0, 100))
+def test_fused_equals_bmm_path(b, n, k, seed):
+    """HEAT's no-materialization path == SimpleX's concat+normalize+bmm."""
+    u, p, negs = _data(b, n, k, seed)
+    ps1, ns1, _ = cosine_similarity(u, p, negs)
+    ps2, ns2 = simplex_bmm_similarity(u, p, negs)
+    np.testing.assert_allclose(ps1, ps2, atol=1e-5)
+    np.testing.assert_allclose(ns1, ns2, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(b=st.integers(1, 8), n=st.integers(1, 4), k=st.integers(2, 16),
+       seed=st.integers(0, 50))
+def test_cosine_bounds_and_self_similarity(b, n, k, seed):
+    u, p, negs = _data(b, n, k, seed)
+    ps, ns, _ = cosine_similarity(u, p, negs)
+    assert np.all(np.abs(np.asarray(ps)) <= 1 + 1e-5)
+    assert np.all(np.abs(np.asarray(ns)) <= 1 + 1e-5)
+    ps_self, _, _ = cosine_similarity(u, u, negs)
+    np.testing.assert_allclose(ps_self, 1.0, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(b=st.integers(1, 8), n=st.integers(1, 4), k=st.integers(2, 16),
+       scale=st.floats(0.1, 100.0), seed=st.integers(0, 50))
+def test_residuals_reusable_after_scaling(b, n, k, scale, seed):
+    """Cosine from cached stats is scale-invariant (the §4.4 cache is valid
+    under any positive rescaling of the inputs)."""
+    u, p, negs = _data(b, n, k, seed)
+    ps1, ns1 = cosine_from_stats(pair_stats(u, p, negs))
+    ps2, ns2 = cosine_from_stats(pair_stats(scale * u, p, negs))
+    np.testing.assert_allclose(ps1, ps2, atol=1e-4)
+    np.testing.assert_allclose(ns1, ns2, atol=1e-4)
+
+
+def test_stats_match_manual():
+    u = jnp.array([[1.0, 2.0]])
+    p = jnp.array([[3.0, 4.0]])
+    negs = jnp.array([[[1.0, 0.0], [0.0, 2.0]]])
+    s = pair_stats(u, p, negs)
+    np.testing.assert_allclose(s.uu, [5.0])
+    np.testing.assert_allclose(s.pp, [25.0])
+    np.testing.assert_allclose(s.up, [11.0])
+    np.testing.assert_allclose(s.nn, [[1.0, 4.0]])
+    np.testing.assert_allclose(s.un, [[1.0, 4.0]])
