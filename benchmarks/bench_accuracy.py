@@ -8,14 +8,17 @@ import jax.numpy as jnp
 
 from benchmarks.common import bench_cfg, bench_dataset, emit
 from repro.core import mf
+from repro.core.engine import resolve_engine
 from repro.core.metrics import evaluate_ranking
 from repro.data import pipeline
 
 
 def _train_eval(cfg, ds, loss_impl="fused", sparse=True, steps=500):
+    engine = resolve_engine(cfg, backend=loss_impl,
+                            update_impl="scatter_add" if sparse else "dense")
     state = mf.init_mf(jax.random.PRNGKey(0), cfg)
     step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg,
-                                     loss_impl=loss_impl, sparse_update=sparse))
+                                     engine=engine))
     rng = jax.random.PRNGKey(1)
     for i in range(steps):
         batch = pipeline.cf_batch(ds, i, 128, cfg.history_len)

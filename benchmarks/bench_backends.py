@@ -1,0 +1,85 @@
+"""Execution-backend matrix: one timed HEAT step per (loss, update) engine
+combination (core/engine.py), plus the neg-source contrast, persisted to
+``BENCH_backends.json``.
+
+Sizes are deliberately small: on CPU the ``pallas`` combos run in interpret
+mode (one unrolled grid step per touched row), so absolute numbers for those
+rows measure the interpreter, not the kernel — they are included for
+completeness/regression tracking, while the jnp engines ("fused",
+"scatter_add", ...) are the meaningful CPU comparison.  On a TPU backend the
+same matrix times the compiled kernels.
+"""
+import functools
+import json
+import os
+
+import jax
+
+from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
+from repro.core import mf
+from repro.core.engine import available_backends, resolve_engine
+from repro.kernels.ops import default_interpret as ops_default_interpret
+
+JSON_PATH = os.environ.get("BENCH_BACKENDS_JSON", "BENCH_backends.json")
+
+_BATCH = 32
+
+
+def _bench_cfg(**kw):
+    return bench_cfg(2000, 4000, emb_dim=64, num_negatives=8, **kw)
+
+
+def _time_engine(cfg, engine, batch_size=_BATCH, iters=5):
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg,
+                                     engine=engine))
+    batch = rand_batch(cfg, batch_size)
+    rng = jax.random.PRNGKey(1)
+    return time_fn(lambda: step(state, batch, rng), iters=iters, warmup=2)
+
+
+def run():
+    adv = available_backends()
+    cfg = _bench_cfg()
+    records = []
+
+    ref_us = None
+    for backend in adv["backend"]:
+        for update in adv["update_impl"]:
+            engine = resolve_engine(cfg, backend=backend, update_impl=update)
+            us = _time_engine(cfg, engine)
+            if (backend, update) == ("fused", "scatter_add"):
+                ref_us = us
+            derived = (f"vs_fused+scatter_add={us / ref_us:.2f}x"
+                       if ref_us else "")
+            emit(f"backends/{engine.name}", us, derived)
+            records.append({"backend": backend, "update_impl": update,
+                            "neg_source": engine.neg_source,
+                            "us_per_call": us, "derived": derived})
+
+    # Negative-source contrast (§4.2): same engine, tile vs uniform source.
+    tcfg = _bench_cfg(tile_size=256, refresh_interval=512)
+    for src in ("tile", "uniform"):
+        engine = resolve_engine(tcfg, neg_source=src)
+        us = _time_engine(tcfg, engine)
+        emit(f"backends/neg_source={src}", us)
+        records.append({"backend": engine.backend,
+                        "update_impl": engine.update_impl, "neg_source": src,
+                        "us_per_call": us, "derived": ""})
+
+    payload = {
+        "batch": _BATCH,
+        "config": {"num_users": cfg.num_users, "num_items": cfg.num_items,
+                   "emb_dim": cfg.emb_dim,
+                   "num_negatives": cfg.num_negatives},
+        "jax_backend": jax.default_backend(),
+        "pallas_interpret": ops_default_interpret(),
+        "rows": records,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("backends/json", 0.0, f"wrote {JSON_PATH} ({len(records)} rows)")
+
+
+if __name__ == "__main__":
+    run()

@@ -18,12 +18,15 @@ import jax
 
 from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
 from repro.core import mf
+from repro.core.engine import resolve_engine
 
 
 def _step(cfg, loss_impl, sparse):
+    engine = resolve_engine(cfg, backend=loss_impl,
+                            update_impl="scatter_add" if sparse else "dense")
     state = mf.init_mf(jax.random.PRNGKey(0), cfg)
     step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg,
-                                     loss_impl=loss_impl, sparse_update=sparse))
+                                     engine=engine))
     batch = rand_batch(cfg, 256)
     rng = jax.random.PRNGKey(1)
     return lambda: step(state, batch, rng)

@@ -1,6 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit) and
+persists the same rows, grouped per suite, to a machine-readable JSON
+artifact (``BENCH_run.json``, override with ``BENCH_RUN_JSON``).  Exits
+non-zero when any suite fails.
+
 Paper-table benchmarks run on the single CPU device at reduced scale; the
 compile-heavy roofline/dry-run artifacts live in separate entrypoints
 (``repro.launch.dryrun`` / ``benchmarks.roofline``) because they force a
@@ -14,9 +18,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_accuracy, bench_aggregation, bench_breakdown,
-                            bench_epoch_time, bench_memory, bench_scaling,
-                            bench_tiling)
+    from benchmarks import (bench_accuracy, bench_aggregation, bench_backends,
+                            bench_breakdown, bench_epoch_time, bench_memory,
+                            bench_scaling, bench_tiling, common)
     print("name,us_per_call,derived")
     suites = [
         ("epoch_time(fig6/7)", bench_epoch_time.run),
@@ -26,15 +30,23 @@ def main() -> None:
         ("accuracy(tab5)", bench_accuracy.run),
         ("scaling(fig12)", bench_scaling.run),
         ("memory(tab3)", bench_memory.run),
+        ("backends(engine-matrix)", bench_backends.run),
     ]
     failures = []
+    results = {}
     for name, fn in suites:
+        first_row = len(common.ROWS)
+        status = "ok"
+        error = None
         try:
             fn()
         except Exception as e:  # noqa: BLE001
             failures.append(name)
+            status, error = "fail", f"{type(e).__name__}: {e}"
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+        results[name] = {"status": status, "error": error,
+                         "rows": common.ROWS[first_row:]}
 
     for tag, path in (("dryrun", "experiments/dryrun_full.json"),
                       ("roofline", "experiments/roofline_baseline.json")):
@@ -45,8 +57,20 @@ def main() -> None:
             skip = sum(1 for r in recs if r.get("status") == "skip")
             fail = sum(1 for r in recs if r.get("status") == "fail")
             print(f"{tag}/summary,0.0,ok={ok} skip={skip} fail={fail}")
+            status = "ok" if fail == 0 else "fail"
+            if fail:
+                failures.append(f"{tag}/summary")
+            results[f"{tag}/summary"] = {"status": status, "error": None,
+                                         "rows": [{"ok": ok, "skip": skip,
+                                                   "fail": fail}]}
+
+    json_path = os.environ.get("BENCH_RUN_JSON", "BENCH_run.json")
+    with open(json_path, "w") as f:
+        json.dump({"suites": results, "failures": failures}, f, indent=2)
+    print(f"json,0.0,wrote {json_path}")
     if failures:
-        sys.exit(f"benchmark suites failed: {failures}")
+        print(f"benchmark suites failed: {failures}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

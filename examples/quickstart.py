@@ -2,10 +2,18 @@
 feedback dataset and evaluate Recall@20 / NDCG@20.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --backend pallas --steps 200
+
+``--backend`` / ``--update-impl`` select the execution engine
+(src/repro/core/engine.py); ``pallas`` runs the paper's fused fwd+bwd kernels
+(interpret mode on CPU, so keep --steps small there).
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import resolve_engine
 from repro.core.metrics import evaluate_ranking
 from repro.core.mf import MFConfig, scores_all_items
 from repro.core.tiling import tune_tiling
@@ -14,22 +22,32 @@ from repro.train import trainer
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="fused")
+    ap.add_argument("--update-impl", default="scatter_add")
+    ap.add_argument("--steps", type=int, default=1500)
+    args = ap.parse_args()
+
     users, items = 1000, 2000
     ds = pipeline.synth_cf_dataset(users, items, interactions_per_user=24,
                                    num_clusters=16, seed=0)
 
     # Algorithm 1 picks the tile size / refresh interval for us.
-    plan = tune_tiling(num_items=items, total_iterations=1500, num_negatives=32,
-                       emb_dim=64, model_shards=1)
+    plan = tune_tiling(num_items=items, total_iterations=args.steps,
+                       num_negatives=32, emb_dim=64, model_shards=1)
     print(f"tiling plan: N1={plan.tile_size} N2={plan.refresh_interval} "
           f"(predicted negative-read speedup {plan.predicted_speedup:.2f}x)")
 
     cfg = MFConfig(num_users=users, num_items=items, emb_dim=32,
                    num_negatives=32, lr=0.2, history_len=8, flush_every=32,
                    tile_size=plan.tile_size,
-                   refresh_interval=plan.refresh_interval)
+                   refresh_interval=plan.refresh_interval,
+                   backend=args.backend, update_impl=args.update_impl)
+    engine = resolve_engine(cfg)
+    print(f"engine: {engine.name}")
 
-    state, losses = trainer.train_mf(cfg, ds, steps=1500, batch_size=256)
+    state, losses = trainer.train_mf(cfg, ds, steps=args.steps, batch_size=256,
+                                     engine=engine)
     print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
 
     scores = scores_all_items(state.params, jnp.arange(users))

@@ -6,11 +6,13 @@ Model: 400k users x 400k items x K=128  ->  102.4M parameters.
     PYTHONPATH=src python examples/train_mf_100m.py [--steps 300]
 """
 import argparse
+import dataclasses
 import time
 
 import jax
 
 from repro.configs.heat_mf import MF_100M
+from repro.core.engine import resolve_engine
 from repro.core.tiling import tune_tiling
 from repro.data import pipeline
 from repro.train import trainer
@@ -21,9 +23,16 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--ckpt-dir", default="/tmp/heat_mf_100m")
+    ap.add_argument("--backend", default="fused",
+                    help="loss backend (fused/autodiff/simplex_bmm/pallas)")
+    ap.add_argument("--update-impl", default="scatter_add",
+                    help="row-update impl (scatter_add/pallas/dense)")
     args = ap.parse_args()
 
-    cfg = MF_100M
+    cfg = dataclasses.replace(MF_100M, backend=args.backend,
+                              update_impl=args.update_impl)
+    engine = resolve_engine(cfg)
+    print(f"engine: {engine.name}")
     n_params = (cfg.num_users + cfg.num_items) * cfg.emb_dim
     print(f"model: {n_params / 1e6:.1f}M params "
           f"({cfg.num_users} users x {cfg.num_items} items x K={cfg.emb_dim})")
@@ -38,7 +47,7 @@ def main():
     # remap the 4096 sampled users onto the full user range deterministically
     t0 = time.time()
     state, losses = trainer.train_mf(cfg, ds, steps=args.steps,
-                                     batch_size=args.batch,
+                                     batch_size=args.batch, engine=engine,
                                      ckpt_dir=args.ckpt_dir, ckpt_every=100)
     dt = time.time() - t0
     print(f"{args.steps} steps in {dt:.1f}s "

@@ -1,0 +1,11 @@
+"""Small jax-version compatibility helpers shared across launch/tests."""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across jax versions (older releases
+    return a one-dict-per-device list, newer ones a single dict)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost or {}

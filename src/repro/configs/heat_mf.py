@@ -4,16 +4,27 @@ Sizes follow the paper's large-dataset regime (§5.3): the Amazon Product
 Reviews scale (21M users / 9.4M items, K=128) plus a ~100M-parameter variant
 used by the end-to-end training example (examples/train_mf_100m.py).
 """
+import dataclasses
+
 from repro.core.mf import MFConfig
 
-# Paper-scale (Amazon Product Reviews, Table 3).
+# Paper-scale (Amazon Product Reviews, Table 3).  Backend fields select the
+# execution engine (core/engine.py): the jnp-fused custom-VJP loss plus XLA
+# scatter-add row updates is the portable default.
 AMAZON = MFConfig(num_users=20_980_000, num_items=9_350_000, emb_dim=128,
                   num_negatives=64, history_len=100, tile_size=1024,
-                  refresh_interval=4096)
+                  refresh_interval=4096,
+                  backend="fused", update_impl="scatter_add", neg_source="auto")
 
 # ~100M-parameter end-to-end config: (400k + 400k) * 128 ≈ 102M.
 MF_100M = MFConfig(num_users=400_000, num_items=400_000, emb_dim=128,
                    num_negatives=64, history_len=0, tile_size=1024,
-                   refresh_interval=2048)
+                   refresh_interval=2048,
+                   backend="fused", update_impl="scatter_add")
+
+# Kernel-path variant: the paper's headline fused fwd+bwd CCL kernels and the
+# gather-FMA row update (compiled on TPU, interpret mode on CPU).
+MF_100M_PALLAS = dataclasses.replace(MF_100M, backend="pallas",
+                                     update_impl="pallas")
 
 CONFIG = AMAZON

@@ -5,6 +5,7 @@
 - samplers:     uniform + random-tiling negative samplers (§4.2)
 - tiling:       Algorithm 1 (N1, N2) autotuner on a TPU cost model
 - mf:           MF model + the full HEAT train step (Fig. 3)
+- engine:       pluggable execution backends (loss / row-update / neg source)
 - aggregation:  SimpleX behavior aggregation + deferred m-step sync (§4.5)
 - heat_head:    the technique as a sampled-CCL output head for LMs
 - metrics:      Recall@K / NDCG@K (Table 5)
@@ -17,6 +18,7 @@ from repro.core.losses import (
     ccl_loss_simplex_bmm,
     mse_loss_dot,
 )
+from repro.core.engine import StepEngine, available_backends, resolve_engine
 from repro.core.mf import Batch, MFConfig, MFParams, MFState, heat_train_step, init_mf
 from repro.core.samplers import TileState, sample_uniform, tile_init, tile_refresh, tile_sample
 from repro.core.tiling import HardwareModel, TilingPlan, tune_tiling

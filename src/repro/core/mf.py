@@ -22,12 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregation as agg
 from repro.core import samplers
-from repro.core.losses import (
-    ccl_loss_autodiff,
-    ccl_loss_fused,
-    ccl_loss_simplex_bmm,
-    mse_loss_dot,
-)
+from repro.core.engine import StepEngine, resolve_engine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +35,12 @@ class MFConfig:
     theta: float = 0.0
     similarity: str = "cosine"
     lr: float = 0.05
+    # Execution backend (core/engine.py). ``backend`` picks the loss
+    # implementation, ``update_impl`` the row-update path, ``neg_source``
+    # where negatives are drawn from ("auto" = tile when one exists).
+    backend: str = "fused"
+    update_impl: str = "scatter_add"
+    neg_source: str = "auto"
     # Behavior aggregation (SimpleX). history_len 0 disables it (MF-CCL).
     history_len: int = 0
     aggregation_kind: str = "avg"
@@ -96,31 +97,28 @@ class Batch(NamedTuple):
 
 
 def _forward_loss(user_e, pos_e, neg_e, hist_e, hist_mask, aggregator, cfg: MFConfig,
-                  loss_impl: str):
+                  engine: StepEngine):
     """Loss as a function of *gathered* embeddings (the HEAT parallelization:
     gradients are computed w.r.t. the touched rows only, never the tables)."""
     if aggregator is not None:
         user_e = agg.aggregate(aggregator, user_e, hist_e, hist_mask,
                                gate=cfg.gate, kind=cfg.aggregation_kind)
-    if loss_impl == "fused":
-        return ccl_loss_fused(user_e, pos_e, neg_e, cfg.mu, cfg.theta, cfg.similarity)
-    if loss_impl == "autodiff":
-        return ccl_loss_autodiff(user_e, pos_e, neg_e, cfg.mu, cfg.theta, cfg.similarity)
-    if loss_impl == "simplex_bmm":
-        return ccl_loss_simplex_bmm(user_e, pos_e, neg_e, cfg.mu, cfg.theta)
-    if loss_impl == "mse_dot":
-        return mse_loss_dot(user_e, pos_e)
-    raise ValueError(f"unknown loss_impl {loss_impl!r}")
+    return engine.loss_fn(user_e, pos_e, neg_e, mu=cfg.mu, theta=cfg.theta,
+                          similarity=cfg.similarity)
 
 
 def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
-                    *, loss_impl: str = "fused", sparse_update: bool = True):
+                    *, engine: Optional[StepEngine] = None):
     """One HEAT iteration.  Returns (new_state, loss).
 
-    ``loss_impl`` selects the fused/reuse path (HEAT) or a baseline;
-    ``sparse_update=False`` reproduces the torch dense-update behaviour
-    (a full-table update) for benchmarking.
+    ``engine`` (core/engine.py) selects the loss implementation, the
+    row-update implementation, and the negative source; ``None`` resolves it
+    from ``cfg.backend`` / ``cfg.update_impl`` / ``cfg.neg_source``.  The
+    engine is static (resolved at trace time), so the step stays jit/pjit
+    compatible.
     """
+    if engine is None:
+        engine = resolve_engine(cfg)
     params, tile = state.params, state.tile
     r_neg, r_tile = jax.random.split(rng)
 
@@ -128,7 +126,11 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     pos_e = params.item_table[batch.pos_ids]
     n_shape = (batch.user_ids.shape[0], cfg.num_negatives)
 
-    if tile is not None:
+    if engine.neg_source == "tile" and tile is None:
+        raise ValueError("engine requires neg_source='tile' but cfg.tile_size "
+                         "is 0 (no resident tile in the state)")
+    use_tile = tile is not None and engine.neg_source != "uniform"
+    if use_tile:
         neg_ids, neg_e, neg_local = samplers.tile_sample(tile, r_neg, n_shape)
     else:
         neg_ids = samplers.sample_uniform(r_neg, cfg.num_items, n_shape)
@@ -141,42 +143,33 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
         hist_mask = batch.hist_mask.astype(user_e.dtype)
 
     def loss_fn(u, p, n, h, a):
-        return _forward_loss(u, p, n, h, hist_mask, a, cfg, loss_impl)
+        return _forward_loss(u, p, n, h, hist_mask, a, cfg, engine)
 
     argnums = (0, 1, 2) + ((3, 4) if params.aggregator is not None else ())
     loss, grads = jax.value_and_grad(loss_fn, argnums=argnums)(
         user_e, pos_e, neg_e, hist_e, params.aggregator)
     g_user, g_pos, g_neg = grads[0], grads[1], grads[2]
 
-    if sparse_update:
-        # §3.1/§4.3: touched rows only. ``.at[].add`` pre-reduces duplicate
-        # indices (segment-sum), so concurrent-row updates cannot conflict.
-        new_user = params.user_table.at[batch.user_ids].add(-cfg.lr * g_user)
-        new_item = params.item_table.at[batch.pos_ids].add(-cfg.lr * g_pos)
-        new_item = new_item.at[neg_ids.reshape(-1)].add(
-            -cfg.lr * g_neg.reshape(-1, cfg.emb_dim))
-        if params.aggregator is not None:
-            g_hist = grads[3]
-            new_item = new_item.at[batch.hist_ids.reshape(-1)].add(
-                -cfg.lr * g_hist.reshape(-1, cfg.emb_dim))
-    else:
-        # Dense baseline: materialize full-table gradients and update every row
-        # (what torch.nn.Embedding with dense grads does — Table 1).
-        dense_gu = jnp.zeros_like(params.user_table).at[batch.user_ids].add(g_user)
-        dense_gi = jnp.zeros_like(params.item_table).at[batch.pos_ids].add(g_pos)
-        dense_gi = dense_gi.at[neg_ids.reshape(-1)].add(
-            g_neg.reshape(-1, cfg.emb_dim))
-        if params.aggregator is not None:
-            dense_gi = dense_gi.at[batch.hist_ids.reshape(-1)].add(
-                grads[3].reshape(-1, cfg.emb_dim))
-        new_user = params.user_table - cfg.lr * dense_gu
-        new_item = params.item_table - cfg.lr * dense_gi
+    # §3.1/§4.3: only touched rows are written (scatter_add / pallas engines;
+    # the dense engine reproduces the torch full-table baseline of Table 1,
+    # accumulating all of the step's item gradients into one dense write).
+    # All update impls use scatter-add semantics, so duplicate indices are
+    # pre-reduced (segment-sum) and concurrent-row updates cannot conflict.
+    new_user = engine.row_update(params.user_table, batch.user_ids, g_user,
+                                 cfg.lr)
+    item_groups = [(batch.pos_ids, g_pos), (neg_ids, g_neg)]
+    if params.aggregator is not None:
+        item_groups.append((batch.hist_ids, grads[3]))
+    new_item = engine.row_update_many(params.item_table, item_groups, cfg.lr)
 
     # Tile coherence: write the same updates through to the replicated copy
     # (negatives by tile-local index; positives/history by global-id match —
     # the cache-coherence analogue), then refresh on schedule (§4.2).
     if tile is not None:
-        tile = samplers.tile_apply_grads(tile, neg_local, g_neg, cfg.lr)
+        if neg_local is not None:
+            tile = samplers.tile_apply_grads(tile, neg_local, g_neg, cfg.lr)
+        else:
+            tile = samplers.tile_apply_global_grads(tile, neg_ids, g_neg, cfg.lr)
         tile = samplers.tile_apply_global_grads(tile, batch.pos_ids, g_pos, cfg.lr)
         if params.aggregator is not None:
             tile = samplers.tile_apply_global_grads(

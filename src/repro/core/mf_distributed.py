@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import mf, samplers
 from repro.core.aggregation import AccumulatorState, AggregatorParams
+from repro.core.engine import StepEngine, resolve_engine
 from repro.models.params import fit_spec
 
 
@@ -117,22 +118,25 @@ def partitioned_batch(ds_sampler, step: int, global_batch: int,
 
 
 def build_mf_cell(cfg: mf.MFConfig, mesh: Mesh, global_batch: int,
-                  loss_impl: str = "fused"):
+                  engine: Optional[StepEngine] = None):
     """Dry-run program for the distributed HEAT step (mirrors specs.build_cell).
 
     Returns (fn, abstract args, in_shardings, donate) consumable by
-    launch/dryrun.lower_cell's jit/lower/compile path.
+    launch/dryrun.lower_cell's jit/lower/compile path.  ``engine`` selects the
+    execution backend; the resolved engine is a static closure, so the same
+    pjit lowering path works for every backend combination.
     """
     import functools
 
+    if engine is None:
+        engine = resolve_engine(cfg)
     state_abs = abstract_state(cfg)
     sspec = state_specs(cfg, mesh)
     batch_abs = abstract_batch(cfg, global_batch)
     bspec = batch_specs(cfg, mesh, global_batch)
     rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
-    step_fn = functools.partial(mf.heat_train_step, cfg=cfg,
-                                loss_impl=loss_impl, sparse_update=True)
+    step_fn = functools.partial(mf.heat_train_step, cfg=cfg, engine=engine)
 
     def to_shardings(spec_tree):
         return jax.tree.map(

@@ -36,6 +36,14 @@ def main():
     ap.add_argument("--mesh", default="host", choices=["host", "production"])
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--backend", default=None,
+                    help="MF loss backend (engine.LOSS_IMPLS): fused, "
+                         "autodiff, simplex_bmm, mse_dot, pallas")
+    ap.add_argument("--update-impl", default=None,
+                    help="MF row-update impl: scatter_add, pallas, dense")
+    ap.add_argument("--neg-source", default=None,
+                    choices=["auto", "uniform", "tile"],
+                    help="negative sampling source (default: auto)")
     args = ap.parse_args()
 
     from repro.distributed import sharding as shd
@@ -47,14 +55,23 @@ def main():
     with shd.use_mesh(mesh if mesh.size > 1 else None):
         if args.mf:
             from repro.configs.heat_mf import MF_100M
+            from repro.core.engine import resolve_engine
             from repro.data import pipeline
             from repro.train import trainer
             cfg = MF_100M if not args.reduced else dataclasses.replace(
                 MF_100M, num_users=2000, num_items=4000, emb_dim=64)
+            overrides = {k: v for k, v in (
+                ("backend", args.backend), ("update_impl", args.update_impl),
+                ("neg_source", args.neg_source)) if v}
+            if overrides:
+                cfg = dataclasses.replace(cfg, **overrides)
+            engine = resolve_engine(cfg)
+            print(f"[launch] MF engine: {engine.name}")
             ds = pipeline.synth_cf_dataset(min(cfg.num_users, 4096),
                                            cfg.num_items)
             state, losses = trainer.train_mf(
                 cfg, ds, steps=args.steps, batch_size=args.batch,
+                engine=engine,
                 ckpt_dir=args.ckpt_dir, fail_at_step=args.fail_at_step)
         else:
             from repro.configs import get_config

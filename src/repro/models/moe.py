@@ -106,8 +106,8 @@ def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
             shard_idx=jax.lax.axis_index("model"), num_shards=n_model,
             axis_name="model")
 
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh,
+    fn = shd.shard_map(
+        shard_fn, mesh,
         in_specs=(P(None, None), w_spec, w_spec, w_spec, x_spec),
-        out_specs=x_spec, check_vma=False)
+        out_specs=x_spec)
     return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)

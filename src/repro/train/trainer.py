@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import heat_head, mf
+from repro.core.engine import StepEngine, resolve_engine
 from repro.data import pipeline
 from repro.models import lm
 from repro.models.config import ArchConfig
@@ -165,15 +166,22 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
 # ----------------------------------------------------------------------------
 
 def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
-             batch_size: int = 256, seed: int = 0, loss_impl: str = "fused",
-             sparse_update: bool = True, ckpt_dir: Optional[str] = None,
+             batch_size: int = 256, seed: int = 0,
+             engine: Optional[StepEngine] = None,
+             ckpt_dir: Optional[str] = None,
              ckpt_every: int = 200, fail_at_step: Optional[int] = None,
              log: Callable[[str], None] = print):
-    """HEAT CF training (Fig. 3 loop) with the same fault-tolerance contract."""
+    """HEAT CF training (Fig. 3 loop) with the same fault-tolerance contract.
+
+    ``engine`` picks the execution backend (core/engine.py); by default it is
+    resolved from ``cfg.backend`` / ``cfg.update_impl`` / ``cfg.neg_source``.
+    """
+    if engine is None:
+        engine = resolve_engine(cfg)
     rng = jax.random.PRNGKey(seed)
     state = mf.init_mf(rng, cfg)
-    step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, loss_impl=loss_impl,
-                              sparse_update=sparse_update), donate_argnums=(0,))
+    step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, engine=engine),
+                      donate_argnums=(0,))
     start = 0
     if ckpt_dir and (s := ckpt.latest_step(ckpt_dir)) is not None:
         state, start, _ = ckpt.restore(ckpt_dir, state)

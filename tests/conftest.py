@@ -1,9 +1,76 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device forcing here — tests run on the
 single real CPU device; multi-device lowering is exercised via subprocesses
-(tests/test_distributed.py) so the main process keeps a 1-device platform."""
+(tests/test_distributed.py) so the main process keeps a 1-device platform.
+
+When the optional ``hypothesis`` dependency is missing, a thin deterministic
+fallback is installed into ``sys.modules`` before collection so the
+property-test modules still import and run (with a fixed number of random
+examples instead of hypothesis' search/shrinking)."""
+import functools
+import inspect
+import random
+import sys
+import types
+
 import jax
 import numpy as np
 import pytest
+
+
+def _install_hypothesis_fallback():
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(**fixture_kw):
+                n = getattr(wrapper, "_fallback_max_examples", 10)
+                rnd = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rnd) for k, s in strategies.items()}
+                    fn(**fixture_kw, **drawn)
+            # Hide the property parameters from pytest's fixture resolution
+            # (hypothesis does the same via its own signature rewriting).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+    def settings(**kw):
+        def deco(fn):
+            fn._fallback_max_examples = kw.get("max_examples", 10)
+            return fn
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given, hyp.settings = given, settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers, st.floats, st.booleans, st.sampled_from = (
+        integers, floats, booleans, sampled_from)
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_fallback()
 
 
 @pytest.fixture(scope="session")

@@ -104,8 +104,8 @@ def f(gs):
     total, _ = compression.compressed_psum(gs, st, "pod")
     return total
 
-total = jax.shard_map(f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-                      check_vma=False)(g)
+from repro.distributed import sharding as shd
+total = shd.shard_map(f, mesh, in_specs=P("pod"), out_specs=P("pod"))(g)
 exact = jnp.broadcast_to(jnp.sum(g, 0, keepdims=True), g.shape)
 # compressed_psum returns the summed value on each shard (replicated rows)
 err = float(jnp.abs(total - exact).max())

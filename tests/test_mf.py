@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import aggregation as agg
+from repro.core.engine import resolve_engine
 from repro.core.mf import Batch, MFConfig, heat_train_step, init_mf, scores_all_items
 
 
@@ -26,11 +27,11 @@ def _batch(b=16, seed=0, hist=0):
                  hist_ids=hist_ids, hist_mask=hist_mask)
 
 
-@pytest.mark.parametrize("loss_impl", ["fused", "autodiff", "simplex_bmm"])
-def test_loss_decreases(loss_impl):
-    cfg = _cfg()
+@pytest.mark.parametrize("backend", ["fused", "autodiff", "simplex_bmm"])
+def test_loss_decreases(backend):
+    cfg = _cfg(backend=backend)
     state = init_mf(jax.random.PRNGKey(0), cfg)
-    step = jax.jit(functools.partial(heat_train_step, cfg=cfg, loss_impl=loss_impl))
+    step = jax.jit(functools.partial(heat_train_step, cfg=cfg))
     batch = _batch()
     losses = []
     for i in range(30):
@@ -46,11 +47,13 @@ def test_fused_equals_autodiff_training():
     s1 = init_mf(jax.random.PRNGKey(0), cfg)
     s2 = init_mf(jax.random.PRNGKey(0), cfg)
     batch = _batch()
+    e_fused = resolve_engine(cfg, backend="fused")
+    e_auto = resolve_engine(cfg, backend="autodiff")
     for i in range(5):
         s1, l1 = heat_train_step(s1, batch, jax.random.PRNGKey(i), cfg,
-                                 loss_impl="fused")
+                                 engine=e_fused)
         s2, l2 = heat_train_step(s2, batch, jax.random.PRNGKey(i), cfg,
-                                 loss_impl="autodiff")
+                                 engine=e_auto)
         np.testing.assert_allclose(l1, l2, atol=1e-6)
     np.testing.assert_allclose(s1.params.user_table, s2.params.user_table,
                                atol=1e-5)
@@ -75,9 +78,9 @@ def test_dense_vs_sparse_same_math():
     state = init_mf(jax.random.PRNGKey(0), cfg)
     batch = _batch(b=8)
     s_sparse, _ = heat_train_step(state, batch, jax.random.PRNGKey(1), cfg,
-                                  sparse_update=True)
+                                  engine=resolve_engine(cfg, update_impl="scatter_add"))
     s_dense, _ = heat_train_step(state, batch, jax.random.PRNGKey(1), cfg,
-                                 sparse_update=False)
+                                 engine=resolve_engine(cfg, update_impl="dense"))
     np.testing.assert_allclose(s_sparse.params.item_table,
                                s_dense.params.item_table, atol=1e-5)
 

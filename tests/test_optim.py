@@ -83,7 +83,8 @@ def test_compressed_psum_matches_exact():
         total, _ = compression.compressed_psum(xs, st, "pod")
         return total
 
-    total = jax.shard_map(
-        f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
-        out_specs=jax.sharding.PartitionSpec(), check_vma=False)(x)
+    from repro.distributed import sharding as shd
+    total = shd.shard_map(
+        f, mesh, in_specs=jax.sharding.PartitionSpec(),
+        out_specs=jax.sharding.PartitionSpec())(x)
     np.testing.assert_allclose(total, x, atol=np.abs(np.asarray(x)).max() / 100)
