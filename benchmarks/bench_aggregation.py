@@ -1,14 +1,31 @@
 """Paper Table 7: behavior-aggregation with vs without local gradient
-accumulation (flush_every=m vs flush_every=1), time + recall."""
+accumulation (flush_every=m vs flush_every=1), time + recall.
+
+Timing methodology (Table 7 compares *epoch* times): each candidate is timed
+as one jitted ``lax.scan`` window of m=32 steps, so the m=32 configuration
+pays its single flush inside the timed region (amortized, as in an epoch) and
+the m=1 configuration pays all 32.  Timing a single step from a fixed state —
+the old approach — never triggered the m=32 flush at all and put per-call
+python/PRNGKey overhead inside the timed region, which is what produced the
+spurious accum_speedup < 1."""
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench_cfg, bench_dataset, emit, rand_batch, time_fn
+from benchmarks.common import (
+    bench_cfg,
+    bench_dataset,
+    emit,
+    rand_batch,
+    ratio_of_passes,
+    time_fns_repeated,
+)
 from repro.core import mf
 from repro.core.metrics import evaluate_ranking
 from repro.data import pipeline
+
+WINDOW = 32     # the paper's m: one full accumulation window per timed call
 
 
 def _setup(flush_every):
@@ -31,23 +48,37 @@ def _train_recall(cfg, ds, state, step, steps=500):
     return float(m["recall@20"])
 
 
+def _window_runner(flush_every):
+    """Jitted m-step scan at paper-scale tables: python stays outside the
+    timed region; returns a zero-arg callable for the interleaved timer."""
+    tcfg = bench_cfg(history_len=100, flush_every=flush_every)
+    tstate = mf.init_mf(jax.random.PRNGKey(0), tcfg)
+    tbatch = rand_batch(tcfg, 1024)
+    rng = jax.random.PRNGKey(2)
+    step = functools.partial(mf.heat_train_step, cfg=tcfg)
+
+    @jax.jit
+    def window(state, batch, key):
+        def body(st, i):
+            st, loss = step(st, batch, jax.random.fold_in(key, i))
+            return st, loss
+        return jax.lax.scan(body, state, jnp.arange(WINDOW))
+
+    return lambda: window(tstate, tbatch, rng)
+
+
 def run():
-    results = {}
-    for m_flush, tag in ((32, "with_accum(m=32)"), (1, "without_accum(m=1)")):
+    (tw, two), passes = time_fns_repeated(
+        [_window_runner(WINDOW), _window_runner(1)], passes=3, iters=4,
+        warmup=2)
+    t_with, t_without = tw / WINDOW, two / WINDOW
+    for m_flush, t, tag in ((WINDOW, t_with, "with_accum(m=32)"),
+                            (1, t_without, "without_accum(m=1)")):
         cfg, ds, state, step = _setup(m_flush)
-        # timing at paper-scale tables
-        tcfg = bench_cfg(history_len=100, flush_every=m_flush)
-        tstate = mf.init_mf(jax.random.PRNGKey(0), tcfg)
-        import functools as _ft
-        tstep = jax.jit(_ft.partial(mf.heat_train_step, cfg=tcfg))
-        tbatch = rand_batch(tcfg, 1024)
-        t = time_fn(lambda: tstep(tstate, tbatch, jax.random.PRNGKey(2)), iters=8)
         r = _train_recall(cfg, ds, state, step)
-        results[tag] = (t, r)
         emit(f"table7/{tag}", t, f"recall@20={r:.4f}")
-    t_w, _ = results["with_accum(m=32)"]
-    t_wo, _ = results["without_accum(m=1)"]
-    emit("table7/accum_speedup", 0.0, f"{t_wo / t_w:.2f}x")
+    emit("table7/accum_speedup", 0.0,
+         f"{ratio_of_passes(passes, 1, 0):.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Execution-backend matrix: one timed HEAT step per (loss, update) engine
-combination (core/engine.py), plus the neg-source contrast, persisted to
-``BENCH_backends.json``.
+combination (core/engine.py), plus the neg-source contrast, the row-update
+kernel-launch counts (single-launch row_update_many vs the chained per-group
+path), and the tile write-through cost (sorted intersection vs the replaced
+O(N1*B) membership mask), persisted to ``BENCH_backends.json``.
 
 Sizes are deliberately small: on CPU the ``pallas`` combos run in interpret
 mode (one unrolled grid step per touched row), so absolute numbers for those
@@ -14,10 +16,19 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
-from repro.core import mf
+from benchmarks.common import (
+    bench_cfg,
+    emit,
+    rand_batch,
+    time_fn,
+    time_fns_interleaved,
+)
+from repro.core import mf, samplers
 from repro.core.engine import available_backends, resolve_engine
+from repro.kernels import ops
 from repro.kernels.ops import default_interpret as ops_default_interpret
 
 JSON_PATH = os.environ.get("BENCH_BACKENDS_JSON", "BENCH_backends.json")
@@ -67,8 +78,65 @@ def run():
                         "update_impl": engine.update_impl, "neg_source": src,
                         "us_per_call": us, "derived": ""})
 
+    # Kernel launches per step (§3.1/§4.5 single-launch contract): the counter
+    # increments once per gather-FMA pallas_call bound during tracing, so
+    # tracing row_update_many for one step's 3 gradient groups must count 1
+    # (the fused cross-group pre-reduce) vs 3 on the chained per-group path.
+    eng_pal = resolve_engine(cfg, backend="pallas", update_impl="pallas")
+    r = np.random.default_rng(0)
+    table = jnp.zeros((cfg.num_items, cfg.emb_dim))
+    groups = [(jnp.asarray(r.integers(0, cfg.num_items, _BATCH), jnp.int32),
+               jnp.zeros((_BATCH, cfg.emb_dim))) for _ in range(3)]
+    ops.reset_launch_count()
+    jax.eval_shape(functools.partial(eng_pal.row_update_many, lr=0.05),
+                   table, groups)
+    fused_launches = ops.launch_count()
+    ops.reset_launch_count()
+    for ids, g in groups:
+        jax.eval_shape(functools.partial(eng_pal.row_update, lr=0.05),
+                       table, ids, g)
+    chained_launches = ops.launch_count()
+    emit("backends/row_update_many_launches", 0.0,
+         f"fused={fused_launches} chained_per_group={chained_launches}")
+
+    # Whole-step count for the pallas engine (user table + all item groups).
+    tile_cfg = _bench_cfg(tile_size=64, refresh_interval=512)
+    state = mf.init_mf(jax.random.PRNGKey(0), tile_cfg)
+    ops.reset_launch_count()
+    jax.jit(functools.partial(mf.heat_train_step, cfg=tile_cfg,
+                              engine=resolve_engine(tile_cfg, backend="pallas",
+                                                    update_impl="pallas"))
+            ).lower(state, rand_batch(tile_cfg, _BATCH), jax.random.PRNGKey(1))
+    emit("backends/launches_per_step(pallas)", 0.0,
+         f"row_update_launches={ops.launch_count()}")
+    launch_rows = {"row_update_many_fused": fused_launches,
+                   "row_update_many_chained": chained_launches}
+
+    # Tile write-through cost (§4.2): sorted intersection vs the replaced
+    # O(N1*B) membership-mask matmul, at fig10 scale (N1=4096 tile rows,
+    # B=1024 positives, K=128).
+    wt_items, wt_n1, wt_b, wt_k = 60000, 4096, 1024, 128
+    wr = jax.random.PRNGKey(7)
+    tile = samplers.tile_init(wr, jax.random.normal(wr, (wt_items, wt_k)),
+                              wt_n1)
+    wt_ids = jax.random.randint(jax.random.fold_in(wr, 1), (wt_b,), 0,
+                                wt_items, dtype=jnp.int32)
+    wt_g = jax.random.normal(jax.random.fold_in(wr, 2), (wt_b, wt_k))
+    f_sorted = jax.jit(lambda t, i, g: samplers.tile_apply_global_grads(
+        t, i, g, 0.05))
+    f_mask = jax.jit(lambda t, i, g: samplers.tile_apply_global_grads_mask(
+        t, i, g, 0.05))
+    t_sorted, t_mask = time_fns_interleaved(
+        [lambda: f_sorted(tile, wt_ids, wt_g),
+         lambda: f_mask(tile, wt_ids, wt_g)], iters=10)
+    emit("backends/tile_write_through(sorted)", t_sorted,
+         f"vs_mask={t_mask / t_sorted:.2f}x")
+    emit("backends/tile_write_through(mask)", t_mask)
+
     payload = {
         "batch": _BATCH,
+        "row_update_launches": launch_rows,
+        "write_through_us": {"sorted": t_sorted, "mask": t_mask},
         "config": {"num_users": cfg.num_users, "num_items": cfg.num_items,
                    "emb_dim": cfg.emb_dim,
                    "num_negatives": cfg.num_negatives},

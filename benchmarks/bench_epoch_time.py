@@ -15,10 +15,37 @@ Derived column reports the speedup over the matching baseline.
 import functools
 
 import jax
+import numpy as np
 
-from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
+from benchmarks.common import (
+    bench_cfg,
+    emit,
+    rand_batch,
+    ratio_of_passes,
+    time_fn,
+    time_fns_interleaved,
+    time_fns_repeated,
+)
 from repro.core import mf
 from repro.core.engine import resolve_engine
+
+
+def _loss_operands(cfg, batch=256, emb_dim=None):
+    """Gathered (user, pos, negs) embeddings at bench scale."""
+    r = jax.random.PRNGKey(3)
+    ku, kp, kn = jax.random.split(r, 3)
+    k = emb_dim or cfg.emb_dim
+    return (jax.random.normal(ku, (batch, k)),
+            jax.random.normal(kp, (batch, k)),
+            jax.random.normal(kn, (batch, cfg.num_negatives, k)))
+
+
+def _loss_value_and_grad(cfg, backend):
+    engine = resolve_engine(cfg, backend=backend)
+    return jax.jit(jax.value_and_grad(
+        lambda u, p, n: engine.loss_fn(u, p, n, mu=cfg.mu, theta=cfg.theta,
+                                       similarity=cfg.similarity),
+        argnums=(0, 1, 2)))
 
 
 def _step(cfg, loss_impl, sparse):
@@ -36,28 +63,62 @@ def run():
     cfg = bench_cfg()
     acfg = bench_cfg(history_len=32, flush_every=32)
 
-    t_baseline = time_fn(_step(cfg, "simplex_bmm", sparse=False), iters=10)
-    t_heat = time_fn(_step(cfg, "fused", sparse=True), iters=10)
+    # All tileless variants share repeated interleaved timing passes: the
+    # derived speedups are ratios, ratios taken from sequential runs drift
+    # with allocator state (the source of the old spurious reuse_speedup
+    # < 1), and each speedup is the median over per-pass ratios so a noise
+    # excursion spanning one whole pass cannot flip it either.
+    (t_baseline, t_heat, t_dense_upd), passes = time_fns_repeated(
+        [_step(cfg, "simplex_bmm", sparse=False),
+         _step(cfg, "fused", sparse=True),
+         _step(cfg, "fused", sparse=False)], passes=3, iters=10)
     emit("fig6/T-MF-CCL(bmm+dense)", t_baseline)
     emit("fig6/H-CCL(fused+sparse)", t_heat,
-         f"speedup={t_baseline / t_heat:.2f}x")
+         f"speedup={ratio_of_passes(passes, 0, 1):.2f}x")
 
-    ta_baseline = time_fn(_step(acfg, "simplex_bmm", sparse=False), iters=10)
-    ta_heat = time_fn(_step(acfg, "fused", sparse=True), iters=10)
+    (ta_baseline, ta_heat), a_passes = time_fns_repeated(
+        [_step(acfg, "simplex_bmm", sparse=False),
+         _step(acfg, "fused", sparse=True)], passes=3, iters=6)
     emit("fig6/T-S(aggr+bmm+dense)", ta_baseline)
     emit("fig6/H-ACCL(aggr+fused+sparse)", ta_heat,
-         f"speedup={ta_baseline / ta_heat:.2f}x")
+         f"speedup={ratio_of_passes(a_passes, 0, 1):.2f}x")
 
-    # §4.4 isolation: identical pipeline, only the backward differs
-    # (cached-residual analytic VJP vs operator-level autodiff).
-    t_autodiff = time_fn(_step(cfg, "autodiff", sparse=True), iters=10)
-    emit("sec4.4/H-CCL-autodiff-bwd", t_autodiff,
-         f"reuse_speedup={t_autodiff / t_heat:.2f}x")
+    # §4.4 isolation: the fused similarity + CCL forward/backward itself
+    # (saved normalized-residual analytic VJP vs operator-level autodiff)
+    # over already-gathered embeddings — the region Fig. 8 profiles.  Inside
+    # a full step the two backends differ by ~2% of wall time (the gathers /
+    # scatters are identical), below this host's run-to-run noise, so timing
+    # whole steps measured the noise, not the backward (the old spurious
+    # 0.73x).  Like Fig. 8, the ratio is measured across embedding dims; the
+    # true XLA-level reuse gain is a few percent (XLA autodiff already
+    # caches residuals, unlike torch), so the headline number is the median
+    # over the dim sweep x repeated interleaved passes — a single pass can
+    # land inside a host-noise excursion.  reuse_speedup < 1 means residual
+    # reuse lost to plain autodiff — a regression against the paper's §4.4
+    # claim; flag it in the derived field so benchmarks/run.py artifacts
+    # surface it.
+    f_fused, f_auto = (_loss_value_and_grad(cfg, b) for b in ("fused",
+                                                              "autodiff"))
+    ratios, t_ad_128 = [], 0.0
+    for dim in (32, 64, 128):
+        u, p, n = _loss_operands(cfg, emb_dim=dim)
+        loss_passes = [time_fns_interleaved(
+            [lambda: f_fused(u, p, n), lambda: f_auto(u, p, n)], iters=30)
+            for _ in range(3)]
+        dim_ratios = [ta / th for th, ta in loss_passes]
+        ratios.extend(dim_ratios)
+        if dim == cfg.emb_dim:
+            t_ad_128 = float(np.median([ta for _, ta in loss_passes]))
+        emit(f"fig8/reuse_dim={dim}", 0.0,
+             f"reuse_speedup={np.median(dim_ratios):.2f}x")
+    reuse = float(np.median(ratios))
+    emit("sec4.4/H-CCL-autodiff-bwd", t_ad_128,
+         f"reuse_speedup={reuse:.2f}x"
+         + (" REGRESSION(reuse_speedup<1.0)" if reuse < 1.0 else ""))
 
     # §3.1 isolation: identical math, dense full-table vs sparse row update.
-    t_dense_upd = time_fn(_step(cfg, "fused", sparse=False), iters=10)
     emit("sec3.1/H-CCL-dense-update", t_dense_upd,
-         f"sparse_speedup={t_dense_upd / t_heat:.2f}x")
+         f"sparse_speedup={ratio_of_passes(passes, 2, 1):.2f}x")
 
     # CuMF_SGD-comparable setting: dot similarity, MSE, 1 negative (Fig. 7)
     c1 = bench_cfg(num_negatives=1, similarity="dot")

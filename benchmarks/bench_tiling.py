@@ -10,7 +10,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench_cfg, bench_dataset, emit, rand_batch, time_fn
+from benchmarks.common import (
+    bench_cfg,
+    bench_dataset,
+    emit,
+    rand_batch,
+    time_fns_interleaved,
+)
 from repro.core import mf
 from repro.core.metrics import evaluate_ranking
 from repro.core.tiling import tune_tiling
@@ -36,23 +42,40 @@ def _recall(state, cfg, ds):
     return float(m["recall@20"])
 
 
-def _iter_time(cfg):
+def _stepper(cfg):
     state = mf.init_mf(jax.random.PRNGKey(0), cfg)
     step = jax.jit(functools.partial(mf.heat_train_step, cfg=cfg))
     batch = rand_batch(cfg, 1024)
     rng = jax.random.PRNGKey(2)
-    return time_fn(lambda: step(state, batch, rng), iters=10)
+    return lambda: step(state, batch, rng)
 
 
 def run():
     # --- timing sweep (60k-item tables, batch 1024) ---
-    t_random = _iter_time(bench_cfg())
+    # One interleaved pass over the uniform sampler and every tiled config:
+    # the derived speedups are ratios against the uniform row, and sequential
+    # timing lets allocator/host drift land entirely on one candidate.
+    tiles = (256, 1024, 4096)
+    intervals = (64, 1024, 8192)
+    # Labeled (tile_size, refresh_interval) candidates, deduplicated:
+    # (1024, 1024) appears in both sweeps but is timed once.
+    configs = {(0, 0): bench_cfg()}
+    for t in tiles:
+        configs.setdefault((t, 1024), bench_cfg(tile_size=t,
+                                                refresh_interval=1024))
+    for i in intervals:
+        configs.setdefault((1024, i), bench_cfg(tile_size=1024,
+                                                refresh_interval=i))
+    labels = list(configs)
+    ts = dict(zip(labels, time_fns_interleaved(
+        [_stepper(configs[k]) for k in labels], iters=25, reduce="min")))
+    t_random = ts[(0, 0)]
     emit("fig10/random_sampler", t_random)
-    for tile in (256, 1024, 4096):
-        t = _iter_time(bench_cfg(tile_size=tile, refresh_interval=1024))
+    for tile in tiles:
+        t = ts[(tile, 1024)]
         emit(f"fig10/tile={tile}", t, f"speedup={t_random / t:.2f}x")
-    for interval in (64, 1024, 8192):
-        t = _iter_time(bench_cfg(tile_size=1024, refresh_interval=interval))
+    for interval in intervals:
+        t = ts[(1024, interval)]
         emit(f"fig11/interval={interval}", t, f"speedup={t_random / t:.2f}x")
 
     # --- accuracy sweep (small learnable dataset) ---

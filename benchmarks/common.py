@@ -33,6 +33,59 @@ def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def time_fns_interleaved(fns: list[Callable], *, iters: int = 20,
+                         warmup: int = 3, reduce: str = "median") -> list[float]:
+    """Wall-time (us) for several callables, sampled round-robin.
+
+    Sequential `time_fn` calls let allocator pressure / frequency drift bias
+    whichever candidate runs later; interleaving the samples exposes every
+    candidate to the same drift, so *ratios* between the returned figures are
+    stable.  Use for any derived speedup that gates a regression check.
+
+    reduce="median" reports typical latency; reduce="min" reports best-case
+    latency (the timeit convention), which is the right estimator when the
+    compared candidates run identical-shape work and the host is shared —
+    OS jitter only ever *adds* time, so the minimum converges on the true
+    cost while the median still carries the noise floor.
+    """
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    samples: list[list[float]] = [[] for _ in fns]
+    for _ in range(iters):
+        for j, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[j].append(time.perf_counter() - t0)
+    agg = np.min if reduce == "min" else np.median
+    return [float(agg(s) * 1e6) for s in samples]
+
+
+def time_fns_repeated(fns: list[Callable], *, passes: int = 3,
+                      iters: int = 12, warmup: int = 3,
+                      reduce: str = "min") -> tuple[list[float], list[list[float]]]:
+    """Several independent interleaved passes over the same candidates.
+
+    Returns ``(medians_per_fn, per_pass_results)``.  Derive each speedup as
+    the median over the per-pass ratios (not the ratio of overall medians):
+    host-noise excursions on this class of shared VM last longer than one
+    pass, so a single interleaved pass — however many iters — can still land
+    entirely inside one; the per-pass ratio median rejects it.
+    """
+    results = [time_fns_interleaved(fns, iters=iters,
+                                    warmup=warmup if i == 0 else 0,
+                                    reduce=reduce)
+               for i in range(passes)]
+    medians = [float(np.median([r[j] for r in results]))
+               for j in range(len(fns))]
+    return medians, results
+
+
+def ratio_of_passes(results: list[list[float]], num: int, den: int) -> float:
+    """Median over passes of results[pass][num] / results[pass][den]."""
+    return float(np.median([r[num] / r[den] for r in results]))
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

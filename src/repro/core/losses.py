@@ -7,10 +7,13 @@ equally, naive XLA autodiff) recomputes ``sum(S_u^2)``, ``sum(T_i^2)`` and
 though the forward pass already produced them.  HEAT caches the three scalars
 per pair and evaluates the analytic gradient (paper Eq. 4/5) directly.
 
-Here the forward pass stores :class:`SimilarityResiduals` and the backward
-pass is the closed-form Eq. 4/5 contraction — zero dot products are
-recomputed.  ``ccl_loss_autodiff`` keeps the plain-autodiff version as the
-baseline that benchmarks/bench_breakdown.py measures against.
+Here the forward-for-gradient pass saves the *normalized* embeddings, the
+inverse norms, and the similarities themselves; the backward is the
+closed-form Eq. 4/5 contraction in normalized form — zero dot products,
+norms, or rsqrts are recomputed.  ``ccl_loss_autodiff`` keeps the
+plain-autodiff version as the baseline that benchmarks/bench_breakdown.py
+and benchmarks/bench_epoch_time.py (the §4.4 ``reuse_speedup`` row) measure
+against.
 
 Note on paper Eq. 5: the printed equation carries a leading minus sign that is
 inconsistent with Eq. 4 by u<->i symmetry (and with finite differences); we
@@ -26,9 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.similarity import (
-    EPS,
-    SimilarityResiduals,
     cosine_from_stats,
+    cosine_from_stats_with_norms,
     pair_stats,
     simplex_bmm_similarity,
 )
@@ -73,48 +75,61 @@ def _ccl_fwd_impl(user, pos, negs, mu, theta, similarity):
     else:
         raise ValueError(f"unknown similarity {similarity!r}")
     loss = _ccl_from_sims(pos_sim, neg_sim, mu, theta)
-    # Residuals: the paper's cached sums + the primal embeddings (needed by
-    # Eq. 4/5 regardless) + the neg-margin mask.  Nothing is recomputed in bwd.
-    return loss, (user, pos, negs, res, neg_sim)
+    return loss, (res, neg_sim)
 
 
 def _ccl_fwd(user, pos, negs, mu, theta, similarity):
-    return _ccl_fwd_impl(user, pos, negs, mu, theta, similarity)
+    """Forward-for-gradient: saves everything the analytic Eq. 4/5 backward
+    consumes — the normalized embeddings, the inverse norms, and the
+    similarities — so the backward recomputes *nothing* (no rsqrt, no norm
+    chains; §4.4's aggressive reuse taken to its endpoint)."""
+    if similarity == "dot":
+        loss, (res, neg_sim) = _ccl_fwd_impl(user, pos, negs, mu, theta,
+                                             similarity)
+        return loss, (user, pos, negs, neg_sim)
+    if similarity != "cosine":
+        raise ValueError(f"unknown similarity {similarity!r}")
+    res = pair_stats(user, pos, negs)
+    pos_sim, neg_sim, inv_u, inv_p, inv_n = cosine_from_stats_with_norms(res)
+    loss = _ccl_from_sims(pos_sim, neg_sim, mu, theta)
+    # Normalized user/pos copies are (B, K) — cheap to save.  The (B, n, K)
+    # negatives stay raw (the primal operand is already resident; a
+    # normalized copy would add a full extra pass over the largest tensor)
+    # and the backward folds their normalization into the saved inv_n.
+    u_hat = user * inv_u[:, None]
+    p_hat = pos * inv_p[:, None]
+    return loss, (u_hat, p_hat, negs, inv_u, inv_p, inv_n, pos_sim, neg_sim)
 
 
 def _ccl_bwd(mu, theta, similarity, saved, g):
-    user, pos, negs, res, neg_sim = saved
-    batch, n = neg_sim.shape
-    # dL/d pos_sim, dL/d neg_sim  (loss is a mean over the batch)
-    d_ps = (-g / batch) * jnp.ones((batch,), user.dtype)
-    d_ns = (g * mu / (n * batch)) * (neg_sim > theta).astype(user.dtype)
-
     if similarity == "dot":
+        user, pos, negs, neg_sim = saved
+        batch, n = neg_sim.shape
+        d_ps = (-g / batch) * jnp.ones((batch,), user.dtype)
+        d_ns = (g * mu / (n * batch)) * (neg_sim > theta).astype(user.dtype)
         grad_u = d_ps[:, None] * pos + jnp.einsum("bn,bnk->bk", d_ns, negs)
         grad_p = d_ps[:, None] * user
         grad_n = d_ns[:, :, None] * user[:, None, :]
         return grad_u, grad_p, grad_n
 
-    # Cosine: Eq. 4/5 evaluated from the cached sums (uu, pp, nn, up, un).
-    uu = res.uu + EPS
-    pp = res.pp + EPS
-    nn = res.nn + EPS
-    inv_u = jax.lax.rsqrt(uu)
-    inv_p = jax.lax.rsqrt(pp)
-    inv_n = jax.lax.rsqrt(nn)
+    # Cosine: Eq. 4/5 in normalized form, consuming only saved quantities
+    # (normalized u/p, similarities, inverse norms — nothing recomputed).
+    u_hat, p_hat, negs, inv_u, inv_p, inv_n, pos_sim, neg_sim = saved
+    batch, n = neg_sim.shape
+    # dL/d pos_sim, dL/d neg_sim  (loss is a mean over the batch)
+    d_ps = (-g / batch) * jnp.ones((batch,), u_hat.dtype)
+    d_ns = (g * mu / (n * batch)) * (neg_sim > theta).astype(u_hat.dtype)
 
-    wp = d_ps * inv_u * inv_p                     # (B,)
-    wn = d_ns * inv_u[:, None] * inv_n            # (B, n)
-
-    # Eq. 4:  d cos/d u = (p * uu - up * u) / (uu^{3/2} sqrt(pp))   [and negs]
-    coeff_u = (wp * res.up + jnp.sum(wn * res.un, axis=-1)) / uu
-    grad_u = (wp[:, None] * pos
-              + jnp.einsum("bn,bnk->bk", wn, negs)
-              - coeff_u[:, None] * user)
-    # Eq. 5 (sign corrected): d cos/d p = (u * pp - up * p) / (pp^{3/2} sqrt(uu))
-    grad_p = wp[:, None] * user - (wp * res.up / pp)[:, None] * pos
-    grad_n = (wn[:, :, None] * user[:, None, :]
-              - (wn * res.un / nn)[:, :, None] * negs)
+    # Eq. 4:  d cos(u,i)/du = (i_hat - cos * u_hat) / ||u||; the negatives'
+    # i_hat is folded into the einsum coefficient (raw negs * inv_n).
+    wn = d_ns * inv_n                                             # (B, n)
+    coeff = d_ps * pos_sim + jnp.sum(d_ns * neg_sim, axis=-1)     # (B,)
+    grad_u = (inv_u[:, None] * (d_ps[:, None] * p_hat - coeff[:, None] * u_hat)
+              + jnp.einsum("bn,bnk->bk", wn * inv_u[:, None], negs))
+    # Eq. 5 (sign corrected): d cos(u,i)/di = (u_hat - cos * i_hat) / ||i||
+    grad_p = (d_ps * inv_p)[:, None] * (u_hat - pos_sim[:, None] * p_hat)
+    grad_n = (wn[:, :, None] * u_hat[:, None, :]
+              - (wn * neg_sim * inv_n)[:, :, None] * negs)
     return grad_u, grad_p, grad_n
 
 

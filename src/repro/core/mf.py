@@ -150,30 +150,50 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
         user_e, pos_e, neg_e, hist_e, params.aggregator)
     g_user, g_pos, g_neg = grads[0], grads[1], grads[2]
 
-    # §3.1/§4.3: only touched rows are written (scatter_add / pallas engines;
-    # the dense engine reproduces the torch full-table baseline of Table 1,
-    # accumulating all of the step's item gradients into one dense write).
-    # All update impls use scatter-add semantics, so duplicate indices are
-    # pre-reduced (segment-sum) and concurrent-row updates cannot conflict.
+    # §3.1/§4.3: only touched rows are written.  All of the step's item
+    # gradient groups go to row_update_many in ONE call: one XLA scatter for
+    # scatter_add, one cross-group pre-reduce + single gather-FMA kernel
+    # launch for pallas, one dense full-table write for the torch baseline
+    # of Table 1.  Scatter-add semantics everywhere, so ids duplicated within
+    # or across groups accumulate and concurrent-row updates cannot conflict.
+    # Tile-sourced negatives whose sample count exceeds the tile are
+    # slot-reduced at the sampler boundary first: the table then scatters N1
+    # unique rows instead of B*n duplicate-heavy ones, and the tile
+    # write-through becomes a dense add (the old per-group double scatter was
+    # what made large tiles slower than uniform sampling).  When the tile is
+    # *larger* than the sample (big N1, small batch) the reduction would
+    # inflate the table write from B*n to N1 rows, so the per-sample scatter
+    # path stays (shapes are static — the branch resolves at trace time).
     new_user = engine.row_update(params.user_table, batch.user_ids, g_user,
                                  cfg.lr)
-    item_groups = [(batch.pos_ids, g_pos), (neg_ids, g_neg)]
+    neg_reduced = None
+    item_groups = [(batch.pos_ids, g_pos)]
+    if neg_local is not None and tile.tile_ids.shape[0] <= neg_local.size:
+        neg_reduced = samplers.reduce_local_grads(neg_local, g_neg,
+                                                  tile.tile_ids.shape[0])
+        item_groups.append((tile.tile_ids, neg_reduced))
+    else:
+        item_groups.append((neg_ids, g_neg))
     if params.aggregator is not None:
         item_groups.append((batch.hist_ids, grads[3]))
     new_item = engine.row_update_many(params.item_table, item_groups, cfg.lr)
 
     # Tile coherence: write the same updates through to the replicated copy
-    # (negatives by tile-local index; positives/history by global-id match —
-    # the cache-coherence analogue), then refresh on schedule (§4.2).
+    # (slot-reduced negatives as a dense add, small tile-sourced samples by
+    # local-index scatter; everything addressed by global id — positives,
+    # history, uniform-sourced negatives — concatenated into ONE
+    # sorted-intersection pass), then refresh on schedule (§4.2).
     if tile is not None:
-        if neg_local is not None:
+        global_groups = [(batch.pos_ids, g_pos)]
+        if neg_reduced is not None:
+            tile = samplers.tile_apply_reduced(tile, neg_reduced, cfg.lr)
+        elif neg_local is not None:
             tile = samplers.tile_apply_grads(tile, neg_local, g_neg, cfg.lr)
         else:
-            tile = samplers.tile_apply_global_grads(tile, neg_ids, g_neg, cfg.lr)
-        tile = samplers.tile_apply_global_grads(tile, batch.pos_ids, g_pos, cfg.lr)
+            global_groups.append((neg_ids, g_neg))
         if params.aggregator is not None:
-            tile = samplers.tile_apply_global_grads(
-                tile, batch.hist_ids, grads[3], cfg.lr)
+            global_groups.append((batch.hist_ids, grads[3]))
+        tile = samplers.tile_apply_global_grads_many(tile, global_groups, cfg.lr)
         tile = samplers.tile_refresh(tile, r_tile, new_item, cfg.refresh_interval)
 
     # Aggregator: local accumulation, deferred flush (§4.5 / Listing 1).

@@ -12,7 +12,14 @@ Partitioning (DESIGN.md §5, rating-matrix reading):
     users — the rating-matrix column dimension).  Positive lookups cross the
     model axis (one (B, K) combine per step); negative lookups go through the
     per-shard random tile, whose (N1, K) gather is amortized over the refresh
-    interval N2 — HEAT's cache insight as a communication schedule.
+    interval N2 — HEAT's cache insight as a communication schedule.  Between
+    refreshes the tile stays coherent with *local* work only: tile-sourced
+    negative gradients are slot-reduced once (samplers.reduce_local_grads,
+    when the sample outnumbers the tile), so the sharded table sees N1 unique
+    rows per step and the tile applies a dense add, and global-id updates
+    (positives/history) reach the tile via
+    the sorted-intersection write-through (tiling.tile_write_through) — no
+    (N1, B) membership mask, no per-step tile re-gather.
   - **aggregator weights** (K, K): replicated; gradients accumulate locally
     and all-reduce every ``flush_every`` steps (§4.5 -> deferred sync).
 

@@ -24,6 +24,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import tiling
+
 
 def sample_uniform(rng: jax.Array, num_items: int, shape: tuple[int, ...]) -> jax.Array:
     """The original random sampler: uniform over the whole item space."""
@@ -32,11 +34,15 @@ def sample_uniform(rng: jax.Array, num_items: int, shape: tuple[int, ...]) -> ja
 
 def sample_unique(rng: jax.Array, num_items: int, n: int) -> jax.Array:
     """n distinct uniform ids (Gumbel-top-k, no O(I) permutation materialized
-    beyond one key vector).  Tiles hold *distinct* rows — like a real cache —
-    which keeps the write-through coherence exact (one tile row per id)."""
+    beyond one key vector), returned **sorted ascending**.  Tiles hold
+    *distinct* rows — like a real cache — which keeps the write-through
+    coherence exact (one tile row per id), and keeping them sorted lets the
+    write-through binary-search the tile (tiling.tile_write_through) instead
+    of materializing an (N1, B) membership mask.  Tile reads are by uniform
+    local index, so the ordering does not bias sampling."""
     keys = jax.random.uniform(rng, (num_items,))
     _, ids = jax.lax.top_k(keys, n)
-    return ids.astype(jnp.int32)
+    return jnp.sort(ids.astype(jnp.int32))
 
 
 class TileState(NamedTuple):
@@ -97,13 +103,59 @@ def tile_apply_grads(state: TileState, local_idx: jax.Array, grads: jax.Array,
     return state._replace(tile_emb=state.tile_emb.at[flat_idx].add(-lr * flat_g))
 
 
+def reduce_local_grads(local_idx: jax.Array, grads: jax.Array,
+                       tile_size: int) -> jax.Array:
+    """Segment-sum tile-sourced gradients by tile slot: (..., K) rows addressed
+    by local index -> one dense (N1, K) gradient.
+
+    With B*n negatives drawn from N1 tile slots the raw gradient is massively
+    duplicate-heavy (B*n/N1 rows per slot on average); reducing it once into
+    the slot-indexed buffer lets the caller (a) scatter only N1 *unique* rows
+    into the item table instead of B*n duplicated ones and (b) apply the tile
+    write-through as a dense add with no scatter at all.  This is the §4.5
+    pre-reduction done at the sampler boundary, where the duplication is
+    known to be bounded by the tile size.
+    """
+    flat_idx = local_idx.reshape(-1)
+    flat_g = grads.reshape(-1, grads.shape[-1])
+    return jnp.zeros((tile_size, flat_g.shape[-1]),
+                     flat_g.dtype).at[flat_idx].add(flat_g)
+
+
+def tile_apply_reduced(state: TileState, reduced: jax.Array,
+                       lr: float) -> TileState:
+    """Write-through for an already slot-reduced (N1, K) gradient: dense FMA
+    on the tile copy (no scatter)."""
+    return state._replace(tile_emb=state.tile_emb - lr * reduced)
+
+
 def tile_apply_global_grads(state: TileState, global_ids: jax.Array,
                             grads: jax.Array, lr: float) -> TileState:
     """Write-through for updates addressed by *global* item id (positives /
     history rows that happen to live in the tile).  The CPU original gets
-    this for free from cache coherence; here a (N1, B) membership mask turns
-    the update into one small matmul — exact for duplicate ids too.
-    """
+    this for free from cache coherence; here the sorted-intersection kernel
+    (tiling.tile_write_through) binary-searches each id against the sorted
+    tile — exact for duplicate ids too (hits scatter-add)."""
+    return state._replace(tile_emb=tiling.tile_write_through(
+        state.tile_ids, state.tile_emb, global_ids, grads, lr))
+
+
+def tile_apply_global_grads_many(state: TileState, groups, lr: float) -> TileState:
+    """One write-through for all of a step's global-id gradient groups
+    (pos / uniform-sourced neg / history): the groups are concatenated and
+    intersected with the tile in a single pass — the tile-side analogue of
+    the single-launch ``row_update_many``."""
+    ids, grads = tiling.concat_groups(groups)
+    return state._replace(tile_emb=tiling.tile_write_through(
+        state.tile_ids, state.tile_emb, ids, grads, lr))
+
+
+def tile_apply_global_grads_mask(state: TileState, global_ids: jax.Array,
+                                 grads: jax.Array, lr: float) -> TileState:
+    """The replaced O(N1*B) membership-mask write-through: materializes an
+    (N1, B) equality mask and applies it as one matmul.  Kept only as the
+    baseline that benchmarks/bench_backends.py contrasts against the sorted
+    intersection (and as a second oracle in tests)."""
     ids = global_ids.reshape(-1)
     g = grads.reshape(-1, grads.shape[-1])
     match = (state.tile_ids[:, None] == ids[None, :]).astype(g.dtype)  # (N1,B)
@@ -123,9 +175,20 @@ class ShardedTileState(NamedTuple):
     step: jax.Array
 
 
+def _sharded_unique_ids(rng: jax.Array, num_items: int, num_shards: int,
+                        tile_size: int) -> jax.Array:
+    """Per-shard distinct sorted ids — the same invariant as the single tile
+    (distinct: one tile row per id keeps write-through exact; sorted: the
+    sorted-intersection write-through binary-searches, and searchsorted finds
+    only the leftmost of a duplicate run, so repeats would silently drop
+    updates)."""
+    keys = jax.random.split(rng, num_shards)
+    return jax.vmap(lambda k: sample_unique(k, num_items, tile_size))(keys)
+
+
 def sharded_tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int,
                       num_shards: int) -> ShardedTileState:
-    ids = sample_uniform(rng, item_table.shape[0], (num_shards, tile_size))
+    ids = _sharded_unique_ids(rng, item_table.shape[0], num_shards, tile_size)
     return ShardedTileState(tile_ids=ids, tile_emb=item_table[ids],
                             step=jnp.zeros((), jnp.int32))
 
@@ -133,7 +196,8 @@ def sharded_tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int,
 def sharded_tile_refresh(state: ShardedTileState, rng: jax.Array, item_table: jax.Array,
                          refresh_interval: int) -> ShardedTileState:
     def do_refresh(s):
-        ids = sample_uniform(rng, item_table.shape[0], s.tile_ids.shape)
+        ids = _sharded_unique_ids(rng, item_table.shape[0],
+                                  s.tile_ids.shape[0], s.tile_ids.shape[1])
         return ShardedTileState(ids, item_table[ids], jnp.zeros((), jnp.int32))
 
     def keep(s):

@@ -52,11 +52,22 @@ def pair_stats(user: jax.Array, pos: jax.Array, negs: jax.Array) -> SimilarityRe
     return SimilarityResiduals(uu=uu, pp=pp, up=up, nn=nn, un=un)
 
 
+def cosine_from_stats_with_norms(res: SimilarityResiduals):
+    """(pos_sim (B,), neg_sim (B,n), inv_u (B,), inv_p (B,), inv_n (B,n))
+    from cached stats — the single definition of the cosine formula, shared
+    by the primal loss and the custom-VJP forward (losses.py) so the two can
+    never diverge on EPS handling or the rsqrt form."""
+    inv_u = jax.lax.rsqrt(res.uu + EPS)
+    inv_p = jax.lax.rsqrt(res.pp + EPS)
+    inv_n = jax.lax.rsqrt(res.nn + EPS)
+    pos_sim = res.up * inv_u * inv_p
+    neg_sim = res.un * inv_u[:, None] * inv_n
+    return pos_sim, neg_sim, inv_u, inv_p, inv_n
+
+
 def cosine_from_stats(res: SimilarityResiduals) -> tuple[jax.Array, jax.Array]:
     """(pos_sim (B,), neg_sim (B,n)) from cached stats."""
-    inv_u = jax.lax.rsqrt(res.uu + EPS)
-    pos_sim = res.up * inv_u * jax.lax.rsqrt(res.pp + EPS)
-    neg_sim = res.un * inv_u[:, None] * jax.lax.rsqrt(res.nn + EPS)
+    pos_sim, neg_sim, _, _, _ = cosine_from_stats_with_norms(res)
     return pos_sim, neg_sim
 
 

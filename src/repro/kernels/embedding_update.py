@@ -21,6 +21,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Trace-time launch counter: every Python call of gather_fma_rows binds one
+# pallas_call into the traced program, so counting calls during tracing counts
+# kernel launches per compiled step.  benchmarks/bench_backends.py uses this to
+# verify the single-launch row_update_many contract (groups/step -> 1 launch).
+_LAUNCHES = 0
+
+
+def launch_count() -> int:
+    """Number of gather-FMA pallas_call binds since the last reset."""
+    return _LAUNCHES
+
+
+def reset_launch_count() -> None:
+    global _LAUNCHES
+    _LAUNCHES = 0
+
 
 def _gather_fma_kernel(ids_ref, table_ref, grad_ref, lr_ref, out_ref):
     """out[i] = table[ids[i]] - lr * grad[i]  for the current grid row."""
@@ -39,6 +55,8 @@ def gather_fma_rows(table: jax.Array, ids: jax.Array, grads: jax.Array,
     table BlockSpec streams one row per grid step, selected by the prefetched
     ids from SMEM.
     """
+    global _LAUNCHES
+    _LAUNCHES += 1
     b, k = grads.shape
     lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -15,7 +15,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.ccl_similarity import ccl_bwd_pallas, ccl_stats_pallas
-from repro.kernels.embedding_update import gather_fma_rows
+from repro.kernels.embedding_update import (
+    gather_fma_rows,
+    launch_count,
+    reset_launch_count,
+)
 from repro.kernels.flash_attention import flash_attention
 
 EPS = 1e-12
@@ -116,6 +120,26 @@ def sparse_row_update(table: jax.Array, ids: jax.Array, grads: jax.Array, lr,
     # Scatter only the live rows; padding lanes are dropped out-of-bounds.
     scatter_ids = jnp.where(jnp.arange(b) < num_unique, uids, table.shape[0])
     return table.at[scatter_ids].set(new_rows, mode="drop")
+
+
+def fused_rows_update(table: jax.Array, groups, lr, *, use_kernel: bool = True,
+                      interpret: bool | None = None) -> jax.Array:
+    """Single-launch row update for one step's worth of gradient groups.
+
+    ``groups`` is a list of ``(ids, grads)`` pairs addressing the same table
+    (HEAT's pos/neg/history item gradients).  Instead of one pre-reduce +
+    kernel launch per group (the chained path this replaces), the groups are
+    concatenated and the whole step runs ONE duplicate-id segment-sum and ONE
+    gather-FMA launch — ids shared *across* groups are pre-reduced together,
+    which both preserves scatter-add semantics exactly and cuts kernel
+    launches per step by the number of groups (3x for pos/neg/history).
+    """
+    # Concat inlined (rather than core.tiling.concat_groups) to keep the
+    # kernels layer free of core imports.
+    ids = jnp.concatenate([i.reshape(-1) for i, _ in groups])
+    grads = jnp.concatenate([g.reshape(-1, g.shape[-1]) for _, g in groups])
+    return sparse_row_update(table, ids, grads, lr, use_kernel=use_kernel,
+                             interpret=interpret)
 
 
 # ----------------------------------------------------------------------------

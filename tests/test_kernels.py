@@ -111,6 +111,27 @@ def test_flash_attention_non_causal():
     np.testing.assert_allclose(got, want, atol=2e-5)
 
 
+def test_fused_rows_update_single_launch_and_parity():
+    """One step's gradient groups -> exactly ONE gather-FMA launch, with the
+    same result as applying the groups through the scatter-add oracle
+    (cross-group duplicate ids accumulate)."""
+    r = jax.random.PRNGKey(3)
+    table = jax.random.normal(r, (50, 8))
+    groups = []
+    for s in range(3):
+        ids = jax.random.randint(jax.random.fold_in(r, s), (12,), 0, 10)
+        g = jax.random.normal(jax.random.fold_in(r, 10 + s), (12, 8))
+        groups.append((ids, g))
+    ops.reset_launch_count()
+    got = ops.fused_rows_update(table, groups, 0.1, use_kernel=True,
+                                interpret=True)
+    assert ops.launch_count() == 1
+    want = table
+    for ids, g in groups:
+        want = ref.rows_update_ref(want, ids, g, 0.1)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
 def test_gather_fma_kernel_direct():
     """Gather+fma kernel: out[i] = table[ids[i]] - lr*g[i], duplicates allowed."""
     table = jnp.arange(40, dtype=jnp.float32).reshape(10, 4)

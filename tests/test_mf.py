@@ -85,14 +85,17 @@ def test_dense_vs_sparse_same_math():
                                s_dense.params.item_table, atol=1e-5)
 
 
-def test_tile_writethrough_coherence():
+@pytest.mark.parametrize("tile_size,b", [(32, 16),   # N1 <= B*n: slot-reduced
+                                         (64, 4)])   # N1 > B*n: per-sample
+def test_tile_writethrough_coherence(tile_size, b):
     """§4.2 adaptation: tile copy stays coherent with the table between
-    refreshes (updates are written through to both)."""
-    cfg = _cfg(tile_size=32, refresh_interval=1000)
+    refreshes (updates are written through to both) — in both negative
+    write-through regimes (slot-reduced dense add vs per-sample scatter)."""
+    cfg = _cfg(tile_size=tile_size, refresh_interval=1000)
     state = init_mf(jax.random.PRNGKey(0), cfg)
     for i in range(5):
-        state, _ = heat_train_step(state, _batch(seed=i), jax.random.PRNGKey(i),
-                                   cfg)
+        state, _ = heat_train_step(state, _batch(b=b, seed=i),
+                                   jax.random.PRNGKey(i), cfg)
     tile = state.tile
     np.testing.assert_allclose(tile.tile_emb,
                                state.params.item_table[tile.tile_ids], atol=1e-4)

@@ -6,7 +6,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import samplers
-from repro.core.tiling import tune_tiling
+from repro.core.tiling import tile_write_through, tune_tiling
 
 
 @settings(deadline=None, max_examples=20)
@@ -50,6 +50,55 @@ def test_refresh_enlarges_sampling_space():
                                       refresh_interval=2)
         seen |= set(np.array(state.tile_ids))
     assert len(seen) > 200        # sampling space ~ M/N2 * N1 >> N1
+
+
+def test_tile_ids_stay_sorted():
+    """Tiles are kept sorted from init and across refreshes — the invariant
+    the sorted-intersection write-through binary-searches against."""
+    rng = jax.random.PRNGKey(4)
+    table = jnp.zeros((300, 4))
+    state = samplers.tile_init(rng, table, 16)
+    assert np.all(np.diff(np.asarray(state.tile_ids)) > 0)
+    for i in range(6):
+        state = samplers.tile_refresh(state, jax.random.fold_in(rng, i),
+                                      table, refresh_interval=2)
+        assert np.all(np.diff(np.asarray(state.tile_ids)) > 0)
+    sh = samplers.sharded_tile_init(rng, table, 16, num_shards=4)
+    assert np.all(np.diff(np.asarray(sh.tile_ids), axis=-1) > 0)  # distinct too
+
+
+@settings(deadline=None, max_examples=15)
+@given(items=st.integers(40, 300), tile=st.integers(4, 32),
+       b=st.integers(1, 50), seed=st.integers(0, 100))
+def test_sorted_write_through_matches_membership_mask(items, tile, b, seed):
+    """Hypothesis: the sorted-intersection write-through == the O(N1*B)
+    membership-mask oracle for arbitrary id multisets (hits, misses, and
+    duplicates accumulate identically)."""
+    rng = jax.random.PRNGKey(seed)
+    table = jax.random.normal(rng, (items, 8))
+    state = samplers.tile_init(rng, table, tile)
+    ids = jax.random.randint(jax.random.fold_in(rng, 1), (b,), 0, items,
+                             dtype=jnp.int32)
+    grads = jax.random.normal(jax.random.fold_in(rng, 2), (b, 8))
+    got = samplers.tile_apply_global_grads(state, ids, grads, 0.1)
+    want = samplers.tile_apply_global_grads_mask(state, ids, grads, 0.1)
+    np.testing.assert_allclose(got.tile_emb, want.tile_emb, atol=1e-5)
+    # the raw kernel agrees too (same arrays, explicit entry point)
+    direct = tile_write_through(state.tile_ids, state.tile_emb, ids, grads, 0.1)
+    np.testing.assert_allclose(direct, want.tile_emb, atol=1e-5)
+
+
+def test_reduce_local_grads_matches_scatter():
+    """Slot-reduction oracle: reduce-then-dense-add == direct scatter-add."""
+    rng = jax.random.PRNGKey(6)
+    state = samplers.tile_init(rng, jax.random.normal(rng, (100, 8)), 16)
+    local = jax.random.randint(jax.random.fold_in(rng, 1), (9, 5), 0, 16,
+                               dtype=jnp.int32)
+    grads = jax.random.normal(jax.random.fold_in(rng, 2), (9, 5, 8))
+    reduced = samplers.reduce_local_grads(local, grads, 16)
+    got = samplers.tile_apply_reduced(state, reduced, 0.1)
+    want = samplers.tile_apply_grads(state, local, grads, 0.1)
+    np.testing.assert_allclose(got.tile_emb, want.tile_emb, atol=1e-5)
 
 
 def test_uniform_sampler_bounds():
