@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from benchmarks.common import bench_cfg, bench_dataset, emit
 from repro.core import mf
 from repro.core.engine import resolve_engine
-from repro.core.metrics import evaluate_ranking
+from repro.core.metrics import ndcg_at_k, recall_at_k
 from repro.data import pipeline
 
 
@@ -23,10 +23,13 @@ def _train_eval(cfg, ds, loss_impl="fused", sparse=True, steps=500):
     for i in range(steps):
         batch = pipeline.cf_batch(ds, i, 128, cfg.history_len)
         state, _ = step(state, batch, jax.random.fold_in(rng, i))
-    scores = mf.scores_all_items(state.params, jnp.arange(cfg.num_users))
-    m = evaluate_ranking(scores, jnp.asarray(ds.train_mask()),
-                         jnp.asarray(ds.test_mask()))
-    return float(m["recall@20"]), float(m["ndcg@20"])
+    # Full-catalog evaluation through the chunked running top-k: the (B, I)
+    # score matrix is never materialized (mf.topk_all_items).
+    ids = mf.topk_all_items(state.params, jnp.arange(cfg.num_users), 20,
+                            item_chunk=256,
+                            exclude_mask=jnp.asarray(ds.train_mask()))
+    test = jnp.asarray(ds.test_mask())
+    return float(recall_at_k(ids, test)), float(ndcg_at_k(ids, test))
 
 
 def run():

@@ -1,8 +1,11 @@
 """Execution-backend matrix: one timed HEAT step per (loss, update) engine
-combination (core/engine.py), plus the neg-source contrast, the row-update
-kernel-launch counts (single-launch row_update_many vs the chained per-group
-path), and the tile write-through cost (sorted intersection vs the replaced
-O(N1*B) membership mask), persisted to ``BENCH_backends.json``.
+combination (core/engine.py), one timed loss fwd+bwd per backend on the LM
+head's step-shared (n, K) negative layout (the ``layout="head"`` rows — both
+callers of the unified engine measured side by side), plus the sampler
+contrast, the row-update kernel-launch counts (single-launch row_update_many
+vs the chained per-group path), and the tile write-through cost (sorted
+intersection vs the replaced O(N1*B) membership mask), persisted to
+``BENCH_backends.json``.
 
 Sizes are deliberately small: on CPU the ``pallas`` combos run in interpret
 mode (one unrolled grid step per touched row), so absolute numbers for those
@@ -65,18 +68,44 @@ def run():
                        if ref_us else "")
             emit(f"backends/{engine.name}", us, derived)
             records.append({"backend": backend, "update_impl": update,
-                            "neg_source": engine.neg_source,
+                            "sampler": engine.sampler_name, "layout": "mf",
                             "us_per_call": us, "derived": derived})
 
-    # Negative-source contrast (§4.2): same engine, tile vs uniform source.
+    # LM-head layout (step-shared (n, K) negatives): the same loss registry
+    # rows measured as one fwd+bwd through jax.value_and_grad — the head's
+    # hot path once the transformer trunk is paid for.
+    t_rows, n_neg, k_dim = 256, 8, 64
+    hr = jax.random.PRNGKey(3)
+    h = jax.random.normal(hr, (t_rows, k_dim))
+    hp = jax.random.normal(jax.random.fold_in(hr, 1), (t_rows, k_dim))
+    hn = jax.random.normal(jax.random.fold_in(hr, 2), (n_neg, k_dim))
+    head_ref_us = None
+    for backend in adv["backend"]:
+        loss_fn = resolve_engine(cfg, backend=backend).loss_fn
+
+        def head_loss(u, p, ng, loss_fn=loss_fn):
+            return loss_fn(u, p, ng, mu=1.0, theta=0.0, similarity="cosine")
+
+        f = jax.jit(jax.value_and_grad(head_loss, argnums=(0, 1, 2)))
+        us = time_fn(lambda: f(h, hp, hn), iters=5, warmup=2)
+        if backend == "fused":
+            head_ref_us = us
+        derived = f"vs_fused={us / head_ref_us:.2f}x" if head_ref_us else ""
+        emit(f"backends/head/{backend}", us, derived)
+        records.append({"backend": backend, "update_impl": "-",
+                        "sampler": "-", "layout": "head",
+                        "us_per_call": us, "derived": derived})
+
+    # Sampler contrast (§4.2 + Chen et al. 2017): same engine, different
+    # NegativeSampler strategy.
     tcfg = _bench_cfg(tile_size=256, refresh_interval=512)
-    for src in ("tile", "uniform"):
-        engine = resolve_engine(tcfg, neg_source=src)
+    for src in ("tile", "uniform", "popularity", "in_batch"):
+        engine = resolve_engine(tcfg, sampler=src)
         us = _time_engine(tcfg, engine)
-        emit(f"backends/neg_source={src}", us)
+        emit(f"backends/sampler={src}", us)
         records.append({"backend": engine.backend,
-                        "update_impl": engine.update_impl, "neg_source": src,
-                        "us_per_call": us, "derived": ""})
+                        "update_impl": engine.update_impl, "sampler": src,
+                        "layout": "mf", "us_per_call": us, "derived": ""})
 
     # Kernel launches per step (§3.1/§4.5 single-launch contract): the counter
     # increments once per gather-FMA pallas_call bound during tracing, so
@@ -140,6 +169,8 @@ def run():
         "config": {"num_users": cfg.num_users, "num_items": cfg.num_items,
                    "emb_dim": cfg.emb_dim,
                    "num_negatives": cfg.num_negatives},
+        "head_config": {"tokens": t_rows, "num_negatives": n_neg,
+                        "emb_dim": k_dim},
         "jax_backend": jax.default_backend(),
         "pallas_interpret": ops_default_interpret(),
         "rows": records,

@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metrics import topk_exclude_train
-from repro.core.mf import MFConfig, init_mf, scores_all_items
+from repro.core.mf import MFConfig, init_mf, topk_all_items
 from repro.data import pipeline
 from repro.train import checkpoint as ckpt
 from repro.train import trainer
@@ -36,8 +35,9 @@ def main():
 
     @jax.jit
     def serve(user_ids):
-        scores = scores_all_items(state.params, user_ids)
-        return topk_exclude_train(scores, train_mask[user_ids], 10)
+        # Chunked running top-k: the (B, I) score matrix never exists.
+        return topk_all_items(state.params, user_ids, 10, item_chunk=512,
+                              exclude_mask=train_mask[user_ids])
 
     # batched requests
     rng = np.random.default_rng(0)

@@ -14,7 +14,7 @@ from repro.core.mf import MFConfig
 AMAZON = MFConfig(num_users=20_980_000, num_items=9_350_000, emb_dim=128,
                   num_negatives=64, history_len=100, tile_size=1024,
                   refresh_interval=4096,
-                  backend="fused", update_impl="scatter_add", neg_source="auto")
+                  backend="fused", update_impl="scatter_add", sampler="auto")
 
 # ~100M-parameter end-to-end config: (400k + 400k) * 128 ≈ 102M.
 MF_100M = MFConfig(num_users=400_000, num_items=400_000, emb_dim=128,

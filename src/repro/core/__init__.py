@@ -5,9 +5,11 @@
 - samplers:     uniform + random-tiling negative samplers (§4.2)
 - tiling:       Algorithm 1 (N1, N2) autotuner on a TPU cost model
 - mf:           MF model + the full HEAT train step (Fig. 3)
-- engine:       pluggable execution backends (loss / row-update / neg source)
+- engine:       the unified sampled-objective API: loss / row-update /
+                NegativeSampler registries shared by mf and heat_head
 - aggregation:  SimpleX behavior aggregation + deferred m-step sync (§4.5)
-- heat_head:    the technique as a sampled-CCL output head for LMs
+- heat_head:    the technique as a sampled-CCL output head for LMs (a thin
+                adapter over engine — no private loss or tile code)
 - metrics:      Recall@K / NDCG@K (Table 5)
 """
 from repro.core.losses import (
@@ -15,10 +17,36 @@ from repro.core.losses import (
     bpr_loss,
     ccl_loss_autodiff,
     ccl_loss_fused,
+    ccl_loss_fused_w,
     ccl_loss_simplex_bmm,
     mse_loss_dot,
 )
-from repro.core.engine import StepEngine, available_backends, resolve_engine
-from repro.core.mf import Batch, MFConfig, MFParams, MFState, heat_train_step, init_mf
-from repro.core.samplers import TileState, sample_uniform, tile_init, tile_refresh, tile_sample
+from repro.core.engine import (
+    NegativeSampler,
+    NegSample,
+    SampleContext,
+    StepEngine,
+    available_backends,
+    register_loss,
+    register_sampler,
+    register_update,
+    resolve_engine,
+)
+from repro.core.mf import (
+    Batch,
+    MFConfig,
+    MFParams,
+    MFState,
+    heat_train_step,
+    init_mf,
+    topk_all_items,
+)
+from repro.core.samplers import (
+    TileState,
+    id_tile_init,
+    sample_uniform,
+    tile_init,
+    tile_refresh,
+    tile_sample,
+)
 from repro.core.tiling import HardwareModel, TilingPlan, tune_tiling

@@ -1,6 +1,8 @@
-"""Execution-backend layer: pluggable loss / row-update / negative-sampling
-implementations behind one interface (the HEAT §4.3/§4.4 hot path made
-first-class).
+"""The single execution API for every sampled-contrastive objective in the
+repo: pluggable loss / row-update / negative-sampling implementations behind
+one registry surface (the HEAT §4.2/§4.3/§4.4 hot path made first-class),
+shared by the MF core (``mf.heat_train_step``) and the LM HEAT head
+(``heat_head.sampled_ccl_loss``).
 
 A :class:`StepEngine` bundles the three decisions a training step has to make:
 
@@ -9,42 +11,59 @@ A :class:`StepEngine` bundles the three decisions a training step has to make:
     operator-level autodiff, the torch-autograd analogue), ``simplex_bmm``
     (SimpleX's concat+normalize+bmm baseline, §3.2), ``mse_dot`` (CuMF_SGD
     class), or ``pallas`` (the fused fwd+bwd Pallas kernels from
-    ``kernels/ops.py`` — compiled on TPU, interpret mode on CPU);
-  * **row update**: how touched embedding rows are written back — ``scatter_add``
-    (XLA ``.at[].add``), ``pallas`` (pre-reduce + gather-FMA kernel + conflict-
-    free scatter, §3.1/§4.5), or ``dense`` (full-table materialized gradients,
-    the profiled torch baseline in Table 1).  Each implementation also has a
-    ``row_update_many`` form that applies *all* of a step's gradient groups
-    (pos/neg/history) at once: one scatter for ``scatter_add``, one cross-group
-    pre-reduce + single gather-FMA launch for ``pallas`` (3x fewer kernel
-    launches per step), one dense write for ``dense``;
-  * **neg source**: where negatives come from — ``auto`` (tile when the state
-    carries one, else uniform), ``tile`` (require the §4.2 resident tile), or
-    ``uniform`` (whole-item-space sampling even when a tile exists).
+    ``kernels/ops.py`` — compiled on TPU, interpret mode on CPU).  The loss
+    contract is **shape-polymorphic over negative layouts**: every registered
+    implementation accepts per-example ``(B, n, K)`` negatives (the MF core)
+    and step-shared ``(n, K)`` negatives (the LM head), dispatched statically
+    on rank, plus an optional per-row ``mask`` for weighted reductions (LM
+    padding).  One registration serves both callers.
+  * **row update**: how touched embedding rows are written back —
+    ``scatter_add`` (XLA ``.at[].add``), ``pallas`` (pre-reduce + gather-FMA
+    kernel + conflict-free scatter, §3.1/§4.5), or ``dense`` (full-table
+    materialized gradients, the profiled torch baseline in Table 1).  Each
+    implementation also has a ``row_update_many`` form that applies *all* of
+    a step's gradient groups (pos/neg/history) at once.
+  * **sampler**: where negatives come from — a :class:`NegativeSampler`
+    resolved from the sampler registry.  Shipped strategies: ``auto`` (tile
+    when the state carries one, else uniform), ``tile`` (the §4.2 resident
+    tile — embedding-carrying for the MF core, id-only for the LM vocab
+    tile), ``uniform``, ``popularity`` (explicit weights, else the Zipfian
+    log-uniform candidate distribution), and ``in_batch`` (the batch's own
+    positives, Chen et al. 2017's shared-negative strategy).
 
 ``resolve_engine(cfg)`` is the single entry point: it reads the ``backend`` /
-``update_impl`` / ``neg_source`` fields of :class:`repro.core.mf.MFConfig` and
-returns a jit/pjit-friendly engine (a frozen dataclass of static callables —
-it is closed over by ``jax.jit``/``pjit``, never traced).  New implementations
-register with :func:`register_loss` / :func:`register_update`.
+``update_impl`` / ``sampler`` fields of :class:`repro.core.mf.MFConfig` (or
+any object with those attributes, e.g. ``HeatHeadConfig``) and returns a
+jit/pjit-friendly engine (a frozen dataclass of static callables — it is
+closed over by ``jax.jit``/``pjit``, never traced).  New implementations
+register with :func:`register_loss` / :func:`register_update` /
+:func:`register_sampler`; adding a loss or a sampling strategy is one
+registration, not a two-file fork.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import samplers
 from repro.core.tiling import concat_groups
 from repro.core.losses import (
     ccl_loss_autodiff,
     ccl_loss_fused,
+    ccl_loss_fused_w,
     ccl_loss_simplex_bmm,
+    loss_weights,
     mse_loss_dot,
 )
 
-# loss_fn(user_e, pos_e, neg_e, *, mu, theta, similarity) -> scalar loss
+# loss_fn(user_e, pos_e, neg_e, *, mu, theta, similarity, mask=None) -> scalar.
+# neg_e: (B, n, K) per-example or (n, K) step-shared (static rank dispatch);
+# mask: optional per-row weights (any shape with B elements) for a masked
+# mean — the LM head's padding contract.
 LossFn = Callable[..., jax.Array]
 # update_fn(table, ids, grads, lr) -> new table.  ids: any int shape, grads:
 # ids.shape + (K,); duplicates allowed (scatter-add semantics required).
@@ -57,7 +76,7 @@ UpdateManyFn = Callable[[jax.Array, list, float], jax.Array]
 LOSS_IMPLS: dict[str, LossFn] = {}
 UPDATE_IMPLS: dict[str, UpdateFn] = {}
 UPDATE_MANY_IMPLS: dict[str, UpdateManyFn] = {}
-NEG_SOURCES = ("auto", "uniform", "tile")
+SAMPLERS: dict[str, "NegativeSampler"] = {}
 
 
 def register_loss(name: str):
@@ -74,44 +93,219 @@ def register_update(name: str):
     return deco
 
 
+def register_sampler(name: str):
+    """Register a :class:`NegativeSampler` class or instance under ``name``."""
+    def deco(obj):
+        SAMPLERS[name] = obj() if isinstance(obj, type) else obj
+        return obj
+    return deco
+
+
+# ----------------------------------------------------------------------------
+# Negative sampling: a first-class protocol (Chen et al. 2017 — the sampling
+# *strategy* is an axis of the objective, not a string flag).
+# ----------------------------------------------------------------------------
+
+class SampleContext(NamedTuple):
+    """Everything a sampler may draw from, threaded functionally through the
+    step.  ``table`` is the live item/vocab embedding table (so gathered
+    negative embeddings participate in autodiff where the caller wants them
+    to); the rest are optional capabilities a strategy can require."""
+
+    table: jax.Array                                  # (I, K)
+    tile: Optional[samplers.TileState] = None         # §4.2 resident tile
+    pos_ids: Optional[jax.Array] = None               # batch positives
+    weights: Optional[jax.Array] = None               # (I,) popularity weights
+
+
+class NegSample(NamedTuple):
+    """Result of one draw: global ids (``shape``), their embeddings
+    (``shape + (K,)``), the threaded-through context, and — for tile-sourced
+    draws — the tile-local slot indices that let the MF step slot-reduce
+    duplicate-heavy gradients (§4.5).
+
+    ``state`` is the protocol's slot for stateful strategies (callers read
+    their tile back from ``state.tile``); the shipped samplers return the
+    context **unchanged** — tile refresh and write-through coherence are the
+    *caller's* job, sequenced after the gradient step (``mf.heat_train_step``
+    / ``heat_head.sampled_ccl_loss``).  A custom sampler that mutates state
+    here must not also expect the caller-side tile maintenance to happen."""
+
+    ids: jax.Array
+    embs: jax.Array
+    state: SampleContext
+    local_idx: Optional[jax.Array] = None
+
+
+@runtime_checkable
+class NegativeSampler(Protocol):
+    """``sample(state, rng, shape) -> NegSample``.  ``shape`` is ``(B, n)``
+    for per-example negatives or ``(n,)`` for a step-shared set; strategies
+    must support both.  Implementations are static under jit — raise at trace
+    time when a required capability is missing from the context."""
+
+    name: str
+
+    def sample(self, state: SampleContext, rng: jax.Array,
+               shape: tuple[int, ...]) -> NegSample:
+        ...
+
+
+@register_sampler("uniform")
+class UniformSampler:
+    """The original random sampler: uniform over the whole item space, even
+    when a resident tile exists."""
+
+    name = "uniform"
+
+    def sample(self, state, rng, shape):
+        ids = samplers.sample_uniform(rng, state.table.shape[0], shape)
+        return NegSample(ids, state.table[ids], state)
+
+
+@register_sampler("tile")
+class TileSampler:
+    """HEAT §4.2 random tiling: draw from the resident tile by local slot.
+
+    With an embedding-carrying tile (MF core) the read is a gather from the
+    small replicated copy — the TPU analogue of an L2 hit.  With an id-only
+    tile (``tile_emb is None``, the LM vocab tile) only the *sampling space*
+    is tiled and embeddings are gathered through the live table so gradients
+    flow to it.
+    """
+
+    name = "tile"
+
+    def sample(self, state, rng, shape):
+        tile = state.tile
+        if tile is None:
+            raise ValueError(
+                "sampler='tile' requires a resident tile in the sample "
+                "context (cfg.tile_size > 0)")
+        local = jax.random.randint(rng, shape, 0, tile.tile_ids.shape[0],
+                                   dtype=jnp.int32)
+        ids = tile.tile_ids[local]
+        embs = state.table[ids] if tile.tile_emb is None else tile.tile_emb[local]
+        return NegSample(ids, embs, state, local_idx=local)
+
+
+@register_sampler("auto")
+class AutoSampler:
+    """Tile when the context carries one, else uniform (the default)."""
+
+    name = "auto"
+
+    def sample(self, state, rng, shape):
+        impl = SAMPLERS["tile" if state.tile is not None else "uniform"]
+        return impl.sample(state, rng, shape)
+
+
+@register_sampler("popularity")
+class PopularitySampler:
+    """Popularity-proportional negatives (Chen et al. 2017 §5: popularity-
+    skewed sampling sharpens the ranking loss where it matters).
+
+    With explicit ``state.weights`` (unnormalized, (I,), zeros excluded) the
+    draw is categorical over their log.  Without weights it falls back to the
+    log-uniform (Zipfian) candidate distribution over ids —
+    ``P(k) ∝ log(1 + 1/(k+1))`` — the word2vec/TF ``log_uniform_candidate_
+    sampler`` convention, which assumes ids are sorted by descending
+    frequency (true of BPE vocab orderings and popularity-sorted item
+    catalogs).
+    """
+
+    name = "popularity"
+
+    def sample(self, state, rng, shape):
+        num = state.table.shape[0]
+        if state.weights is not None:
+            w = state.weights.astype(jnp.float32)
+            logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
+            ids = jax.random.categorical(rng, logits, shape=shape)
+            ids = ids.astype(jnp.int32)
+        else:
+            u = jax.random.uniform(rng, shape)
+            ids = jnp.floor(jnp.exp(u * jnp.log(float(num + 1)))).astype(
+                jnp.int32) - 1
+            ids = jnp.clip(ids, 0, num - 1)
+        return NegSample(ids, state.table[ids], state)
+
+
+@register_sampler("in_batch")
+class InBatchSampler:
+    """Negatives drawn from the batch's own positives (shared-negative reuse,
+    Chen et al. 2017 §4.2): free gathers, popularity-biased by construction.
+
+    Per-example ``(B, n)`` draws exclude each row's own *batch slot* (offset
+    trick over the other B-1 rows); a shared ``(n,)`` draw samples uniformly
+    from all B positives.  The exclusion is by slot, not by item id — if the
+    same item is the positive of several rows (or B == 1), it can still be
+    drawn as a row's negative, the usual in-batch false-negative trade-off.
+    """
+
+    name = "in_batch"
+
+    def sample(self, state, rng, shape):
+        if state.pos_ids is None:
+            raise ValueError("sampler='in_batch' requires pos_ids in the "
+                             "sample context")
+        pos = state.pos_ids.reshape(-1)
+        b = pos.shape[0]
+        if len(shape) >= 2 and shape[0] == b and b > 1:
+            off = jax.random.randint(rng, shape, 1, b, dtype=jnp.int32)
+            rows = jnp.arange(b, dtype=jnp.int32).reshape(
+                (b,) + (1,) * (len(shape) - 1))
+            j = (rows + off) % b
+        else:
+            j = jax.random.randint(rng, shape, 0, b, dtype=jnp.int32)
+        ids = pos[j]
+        return NegSample(ids, state.table[ids], state)
+
+
 @dataclasses.dataclass(frozen=True)
 class StepEngine:
-    """One execution backend for ``mf.heat_train_step`` (static under jit)."""
+    """One execution backend for a sampled objective (static under jit)."""
 
     backend: str                 # loss implementation name
     update_impl: str             # row-update implementation name
-    neg_source: str              # "auto" | "uniform" | "tile"
+    sampler_name: str            # negative-sampling strategy name
     loss_fn: LossFn = dataclasses.field(compare=False)
     row_update: UpdateFn = dataclasses.field(compare=False)
     row_update_many: UpdateManyFn = dataclasses.field(compare=False)
+    sampler: NegativeSampler = dataclasses.field(compare=False)
 
     @property
     def name(self) -> str:
-        return f"{self.backend}+{self.update_impl}+{self.neg_source}"
+        return f"{self.backend}+{self.update_impl}+{self.sampler_name}"
 
 
 # ----------------------------------------------------------------------------
-# Loss implementations.
+# Loss implementations (shape-polymorphic: (B, n, K) and shared (n, K)).
 # ----------------------------------------------------------------------------
 
 @register_loss("fused")
-def _loss_fused(user_e, pos_e, neg_e, *, mu, theta, similarity):
-    return ccl_loss_fused(user_e, pos_e, neg_e, mu, theta, similarity)
+def _loss_fused(user_e, pos_e, neg_e, *, mu, theta, similarity, mask=None):
+    if neg_e.ndim == 3 and mask is None:
+        return ccl_loss_fused(user_e, pos_e, neg_e, mu, theta, similarity)
+    w = loss_weights(mask, user_e.shape[0], user_e.dtype)
+    return ccl_loss_fused_w(user_e, pos_e, neg_e, w, mu, theta, similarity)
 
 
 @register_loss("autodiff")
-def _loss_autodiff(user_e, pos_e, neg_e, *, mu, theta, similarity):
-    return ccl_loss_autodiff(user_e, pos_e, neg_e, mu, theta, similarity)
+def _loss_autodiff(user_e, pos_e, neg_e, *, mu, theta, similarity, mask=None):
+    return ccl_loss_autodiff(user_e, pos_e, neg_e, mu, theta, similarity,
+                             mask=mask)
 
 
 @register_loss("simplex_bmm")
-def _loss_simplex_bmm(user_e, pos_e, neg_e, *, mu, theta, similarity):
-    return ccl_loss_simplex_bmm(user_e, pos_e, neg_e, mu, theta)
+def _loss_simplex_bmm(user_e, pos_e, neg_e, *, mu, theta, similarity,
+                      mask=None):
+    return ccl_loss_simplex_bmm(user_e, pos_e, neg_e, mu, theta, mask=mask)
 
 
 @register_loss("mse_dot")
-def _loss_mse_dot(user_e, pos_e, neg_e, *, mu, theta, similarity):
-    return mse_loss_dot(user_e, pos_e)
+def _loss_mse_dot(user_e, pos_e, neg_e, *, mu, theta, similarity, mask=None):
+    return mse_loss_dot(user_e, pos_e, mask=mask)
 
 
 @functools.lru_cache(maxsize=None)
@@ -120,13 +314,27 @@ def _pallas_ccl(mu: float, theta: float):
     return make_ccl_loss_pallas(mu=mu, theta=theta)
 
 
+@functools.lru_cache(maxsize=None)
+def _pallas_ccl_shared(mu: float, theta: float):
+    from repro.kernels.ops import make_ccl_loss_shared_pallas
+    return make_ccl_loss_shared_pallas(mu=mu, theta=theta)
+
+
 @register_loss("pallas")
-def _loss_pallas(user_e, pos_e, neg_e, *, mu, theta, similarity):
+def _loss_pallas(user_e, pos_e, neg_e, *, mu, theta, similarity, mask=None):
     if similarity != "cosine":
         raise ValueError(
             "backend='pallas' implements cosine similarity only "
             f"(got similarity={similarity!r})")
-    return _pallas_ccl(float(mu), float(theta))(user_e, pos_e, neg_e)
+    if neg_e.ndim == 3:
+        if mask is not None:
+            raise ValueError(
+                "backend='pallas' does not implement masked per-example "
+                "negatives; use backend='fused' (the LM head's shared "
+                "layout supports masks)")
+        return _pallas_ccl(float(mu), float(theta))(user_e, pos_e, neg_e)
+    w = loss_weights(mask, user_e.shape[0], user_e.dtype)
+    return _pallas_ccl_shared(float(mu), float(theta))(user_e, pos_e, neg_e, w)
 
 
 # ----------------------------------------------------------------------------
@@ -151,7 +359,6 @@ def _update_pallas(table, ids, grads, lr):
 
 @register_update("dense")
 def _update_dense(table, ids, grads, lr):
-    import jax.numpy as jnp
     ids, grads = _flatten(ids, grads)
     dense = jnp.zeros_like(table).at[ids].add(grads)
     return table - lr * dense
@@ -187,7 +394,6 @@ def _update_dense_many(table, pairs, lr):
     """Torch dense baseline (Table 1): accumulate every gradient group into
     ONE dense buffer and write the full table once per step — not once per
     group, which would overstate the baseline's memory traffic."""
-    import jax.numpy as jnp
     dense = jnp.zeros_like(table)
     for ids, grads in pairs:
         ids, grads = _flatten(ids, grads)
@@ -205,33 +411,40 @@ UPDATE_MANY_IMPLS["dense"] = _update_dense_many
 def available_backends() -> dict[str, tuple[str, ...]]:
     """The advertised combination matrix (for docs, benchmarks, tests)."""
     return {"backend": tuple(LOSS_IMPLS), "update_impl": tuple(UPDATE_IMPLS),
-            "neg_source": NEG_SOURCES}
+            "sampler": tuple(SAMPLERS)}
 
 
 def resolve_engine(cfg=None, *, backend: Optional[str] = None,
                    update_impl: Optional[str] = None,
-                   neg_source: Optional[str] = None) -> StepEngine:
+                   sampler: Optional[str] = None) -> StepEngine:
     """Single entry point: config fields -> StepEngine (kwargs override cfg)."""
+    if sampler is None and getattr(cfg, "neg_source", None) is not None \
+            and getattr(cfg, "sampler", None) is None:
+        raise ValueError(
+            "the neg_source string field was replaced by the NegativeSampler "
+            "registry: set cfg.sampler (or pass sampler=) to one of "
+            f"{sorted(SAMPLERS)}")
     backend = backend or (getattr(cfg, "backend", None) or "fused")
     update_impl = update_impl or (getattr(cfg, "update_impl", None)
                                   or "scatter_add")
-    neg_source = neg_source or (getattr(cfg, "neg_source", None) or "auto")
+    sampler = sampler or (getattr(cfg, "sampler", None) or "auto")
     if backend not in LOSS_IMPLS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"available: {sorted(LOSS_IMPLS)}")
     if update_impl not in UPDATE_IMPLS:
         raise ValueError(f"unknown update_impl {update_impl!r}; "
                          f"available: {sorted(UPDATE_IMPLS)}")
-    if neg_source not in NEG_SOURCES:
-        raise ValueError(f"unknown neg_source {neg_source!r}; "
-                         f"available: {list(NEG_SOURCES)}")
+    if sampler not in SAMPLERS:
+        raise ValueError(f"unknown sampler {sampler!r}; "
+                         f"available: {sorted(SAMPLERS)}")
     if backend == "pallas" and getattr(cfg, "similarity", "cosine") != "cosine":
         raise ValueError(
             "backend='pallas' implements cosine similarity only "
             f"(cfg.similarity={cfg.similarity!r})")
     update = UPDATE_IMPLS[update_impl]
     return StepEngine(backend=backend, update_impl=update_impl,
-                      neg_source=neg_source, loss_fn=LOSS_IMPLS[backend],
+                      sampler_name=sampler, loss_fn=LOSS_IMPLS[backend],
                       row_update=update,
                       row_update_many=UPDATE_MANY_IMPLS.get(
-                          update_impl, _chain_updates(update)))
+                          update_impl, _chain_updates(update)),
+                      sampler=SAMPLERS[sampler])

@@ -1,4 +1,5 @@
-"""HEAT-CCL output head for language models (DESIGN.md §4).
+"""HEAT-CCL output head for language models (DESIGN.md §4) — a thin adapter
+over the unified engine (core/engine.py).
 
 The assigned architecture pool is LM-family transformers; HEAT's technique
 targets huge embedding tables with sampled contrastive training.  An LM's
@@ -6,10 +7,21 @@ output table (up to 256 K rows here) *is* an item table: this head replaces
 the full-vocab softmax with SimpleX/HEAT training of the output embeddings —
 
     positive  = output embedding of the target token,
-    negatives = n rows drawn by the random-tiling sampler (§4.2), **shared
-                across the step's tokens** (the per-data-shard analogue of the
-                paper's per-thread negative set),
-    loss      = CCL over cosine similarities (Eq. 3).
+    negatives = n rows drawn by the engine's NegativeSampler (§4.2's tile,
+                uniform, popularity, or in-batch), **shared across the step's
+                tokens** (the per-data-shard analogue of the paper's
+                per-thread negative set),
+    loss      = the engine's loss registry evaluated on the shared (n, K)
+                layout (CCL over cosine similarities, Eq. 3, by default).
+
+There is no private loss or tile code here: ``sampled_ccl_loss`` resolves its
+loss and sampler from the same registries as ``mf.heat_train_step``, so the
+Pallas fused CCL kernels (``backend="pallas"``) and every sampling strategy
+are reachable from LM training with one registration.  The vocab tile is an
+id-only ``samplers.TileState`` (``tile_emb=None``): only the *sampling space*
+is tiled, embeddings are gathered through the live table so gradients flow
+(no detached-copy staleness — the custom-VJP residual reuse lives in the
+loss, §4.4).
 
 Roofline effect (measured in EXPERIMENTS.md §Perf): the full-softmax head is
 a (tokens, d) x (d, V) matmul + V-wide softmax + a (tokens, V) x (V, d)
@@ -17,10 +29,6 @@ backward; the HEAT head is (tokens, d) x (d, 1+n) with n ~ 64-128 — a ~V/n
 reduction in head FLOPs — and the only table traffic is a 1-row-per-token
 positive gather plus an n-row negative gather, so with the table row-sharded
 over `model` the per-step logits all-reduce disappears.
-
-Gradients flow to the table through the gathers (plain autodiff scatter), so
-no detached-copy staleness exists in the LM head; the custom-VJP residual
-reuse lives in the (B, n, K) per-example MF core where it pays (§4.4).
 """
 from __future__ import annotations
 
@@ -30,8 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import samplers
-
-EPS = 1e-12
+from repro.core.engine import SampleContext, StepEngine, resolve_engine
 
 
 class HeatHeadConfig(NamedTuple):
@@ -39,73 +46,45 @@ class HeatHeadConfig(NamedTuple):
     mu: float = 1.0
     theta: float = 0.0
     similarity: str = "cosine"
-    tile_size: int = 0          # 0 = uniform sampling over the vocab
+    tile_size: int = 0          # 0 = no vocab tile (uniform over the vocab)
     refresh_interval: int = 1024
-
-
-class HeadTileState(NamedTuple):
-    """Id-only tile for the LM head (embeddings are gathered through the
-    table so gradients flow; only the *sampling space* is tiled, §4.2)."""
-
-    tile_ids: jax.Array     # (N1,) int32
-    step: jax.Array         # () int32
-
-
-def head_tile_init(rng: jax.Array, vocab: int, tile_size: int) -> HeadTileState:
-    return HeadTileState(samplers.sample_uniform(rng, vocab, (tile_size,)),
-                         jnp.zeros((), jnp.int32))
-
-
-def head_tile_refresh(state: HeadTileState, rng: jax.Array, vocab: int,
-                      refresh_interval: int) -> HeadTileState:
-    def do(s):
-        return HeadTileState(
-            samplers.sample_uniform(rng, vocab, s.tile_ids.shape),
-            jnp.zeros((), jnp.int32))
-
-    def keep(s):
-        return HeadTileState(s.tile_ids, s.step + 1)
-
-    return jax.lax.cond(state.step >= refresh_interval - 1, do, keep, state)
+    backend: str = "fused"      # loss implementation (engine.LOSS_IMPLS)
+    sampler: str = "auto"       # negative strategy (engine.SAMPLERS)
 
 
 def sampled_ccl_loss(hidden: jax.Array, targets: jax.Array, out_table: jax.Array,
                      rng: jax.Array, cfg: HeatHeadConfig,
-                     tile: Optional[HeadTileState] = None,
-                     mask: Optional[jax.Array] = None):
-    """hidden (B,S,D), targets (B,S) int32, out_table (V,D) -> (loss, new_tile)."""
+                     tile: Optional[samplers.TileState] = None,
+                     mask: Optional[jax.Array] = None,
+                     *, engine: Optional[StepEngine] = None):
+    """hidden (B,S,D), targets (B,S) int32, out_table (V,D) -> (loss, new_tile).
+
+    The loss and the negative draw both go through the engine registries
+    (``cfg.backend`` / ``cfg.sampler``; pass ``engine`` to override).  The
+    negatives arrive in the step-shared (n, K) layout, so one loss
+    registration serves this head and the MF core's (B, n, K) path alike.
+    """
+    if engine is None:
+        engine = resolve_engine(backend=cfg.backend, sampler=cfg.sampler)
     b, s, d = hidden.shape
     h = hidden.reshape(b * s, d)
-    pos_e = out_table[targets.reshape(b * s)]                    # (T, D)
+    tgt = targets.reshape(b * s)
+    pos_e = out_table[tgt]                                       # (T, D)
 
     r_neg, r_tile = jax.random.split(rng)
-    n = cfg.num_negatives
-    if tile is not None:
-        local = jax.random.randint(r_neg, (n,), 0, tile.tile_ids.shape[0])
-        neg_ids = tile.tile_ids[local]
-        new_tile = head_tile_refresh(tile, r_tile, out_table.shape[0],
-                                     cfg.refresh_interval)
-    else:
-        neg_ids = samplers.sample_uniform(r_neg, out_table.shape[0], (n,))
-        new_tile = None
-    neg_e = out_table[neg_ids]                                   # (n, D)
+    drawn = engine.sampler.sample(
+        SampleContext(table=out_table, tile=tile, pos_ids=tgt),
+        r_neg, (cfg.num_negatives,))
+    neg_e = drawn.embs                                           # (n, D)
 
-    if cfg.similarity == "cosine":
-        inv_h = jax.lax.rsqrt(jnp.sum(h * h, -1) + EPS)          # (T,)
-        inv_p = jax.lax.rsqrt(jnp.sum(pos_e * pos_e, -1) + EPS)
-        inv_n = jax.lax.rsqrt(jnp.sum(neg_e * neg_e, -1) + EPS)  # (n,)
-        pos_sim = jnp.sum(h * pos_e, -1) * inv_h * inv_p
-        neg_sim = (h @ neg_e.T) * inv_h[:, None] * inv_n[None, :]
-    else:
-        pos_sim = jnp.sum(h * pos_e, -1)
-        neg_sim = h @ neg_e.T
-    per_tok = (1.0 - pos_sim) + (cfg.mu / n) * jnp.sum(
-        jnp.maximum(neg_sim - cfg.theta, 0.0), axis=-1)
-    if mask is not None:
-        m = mask.reshape(b * s).astype(per_tok.dtype)
-        loss = jnp.sum(per_tok * m) / jnp.maximum(jnp.sum(m), 1.0)
-    else:
-        loss = jnp.mean(per_tok)
+    m = mask.reshape(b * s) if mask is not None else None
+    loss = engine.loss_fn(h, pos_e, neg_e, mu=cfg.mu, theta=cfg.theta,
+                          similarity=cfg.similarity, mask=m)
+
+    new_tile = drawn.state.tile
+    if new_tile is not None:
+        new_tile = samplers.tile_refresh(new_tile, r_tile, out_table,
+                                         cfg.refresh_interval)
     return loss, new_tile
 
 

@@ -31,8 +31,10 @@ import jax.numpy as jnp
 from repro.core.similarity import (
     cosine_from_stats,
     cosine_from_stats_with_norms,
+    layout_stats,
     pair_stats,
     simplex_bmm_similarity,
+    simplex_bmm_similarity_shared,
 )
 
 
@@ -49,6 +51,26 @@ def _ccl_from_sims(pos_sim: jax.Array, neg_sim: jax.Array, mu: float, theta: flo
     neg_part = jnp.maximum(neg_sim - theta, 0.0)
     per_example = (1.0 - pos_sim) + (mu / neg_sim.shape[-1]) * jnp.sum(neg_part, axis=-1)
     return jnp.mean(per_example)
+
+
+def _ccl_rows(pos_sim: jax.Array, neg_sim: jax.Array, mu: float,
+              theta: float) -> jax.Array:
+    """Per-row Eq. 3 losses (no reduction)."""
+    neg_part = jnp.maximum(neg_sim - theta, 0.0)
+    return (1.0 - pos_sim) + (mu / neg_sim.shape[-1]) * jnp.sum(neg_part, axis=-1)
+
+
+def loss_weights(mask, rows: int, dtype) -> jax.Array:
+    """Normalized per-row reduction weights for the engine loss contract.
+
+    ``mask=None`` -> uniform ``1/rows`` (plain mean); a mask (any shape with
+    ``rows`` elements, e.g. an LM padding mask) -> ``m / max(sum(m), 1)`` so
+    masked rows contribute nothing and the rest average as before.
+    """
+    if mask is None:
+        return jnp.full((rows,), 1.0 / rows, dtype)
+    m = mask.reshape(rows).astype(dtype)
+    return m / jnp.maximum(jnp.sum(m), 1.0)
 
 
 # ----------------------------------------------------------------------------
@@ -137,25 +159,133 @@ ccl_loss_fused.defvjp(_ccl_fwd, _ccl_bwd)
 
 
 # ----------------------------------------------------------------------------
+# Weighted fused CCL, shape-polymorphic over negative layouts.
+#
+# One custom-VJP serving both the MF core's per-example (B, n, K) negatives
+# and the LM head's step-shared (n, K) negatives, with explicit per-row
+# reduction weights ``w`` (loss_weights above) so masked LM tokens drop out
+# of both the loss and the analytic backward.  Residual reuse is the same as
+# ``ccl_loss_fused``: normalized embeddings, inverse norms and similarities
+# are saved forward and nothing is recomputed in the backward.
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def ccl_loss_fused_w(user, pos, negs, w, mu=1.0, theta=0.0,
+                     similarity="cosine"):
+    """Weighted CCL: sum_t w_t * L_t.  negs may be (B, n, K) or shared (n, K).
+
+    ``w`` (B,) should already be normalized (see :func:`loss_weights`); with
+    ``w = 1/B`` this equals ``ccl_loss_fused`` exactly.
+    """
+    ps, ns = _layout_sims(user, pos, negs, similarity)
+    return jnp.sum(_ccl_rows(ps, ns, mu, theta) * w)
+
+
+def _layout_sims(user, pos, negs, similarity):
+    res = layout_stats(user, pos, negs)
+    if similarity == "cosine":
+        return cosine_from_stats(res)
+    if similarity == "dot":
+        return res.up, res.un
+    raise ValueError(f"unknown similarity {similarity!r}")
+
+
+def _ccl_w_fwd(user, pos, negs, w, mu, theta, similarity):
+    if similarity == "dot":
+        ps, ns = _layout_sims(user, pos, negs, similarity)
+        loss = jnp.sum(_ccl_rows(ps, ns, mu, theta) * w)
+        return loss, (user, pos, negs, ps, ns, w)
+    if similarity != "cosine":
+        raise ValueError(f"unknown similarity {similarity!r}")
+    res = layout_stats(user, pos, negs)
+    ps, ns, inv_u, inv_p, inv_n = cosine_from_stats_with_norms(res)
+    loss = jnp.sum(_ccl_rows(ps, ns, mu, theta) * w)
+    u_hat = user * inv_u[:, None]
+    p_hat = pos * inv_p[:, None]
+    return loss, (u_hat, p_hat, negs, inv_u, inv_p, inv_n, ps, ns, w)
+
+
+def _ccl_w_bwd(mu, theta, similarity, saved, g):
+    shared = saved[2].ndim == 2               # negs (n, K) vs (B, n, K)
+
+    if similarity == "dot":
+        user, pos, negs, ps, ns, w = saved
+        n = ns.shape[-1]
+        d_ps = -g * w                                             # (B,)
+        d_ns = (g * mu / n) * w[:, None] * (ns > theta).astype(user.dtype)
+        grad_p = d_ps[:, None] * user
+        if shared:
+            grad_u = d_ps[:, None] * pos + d_ns @ negs
+            grad_n = d_ns.T @ user
+        else:
+            grad_u = d_ps[:, None] * pos + jnp.einsum("bn,bnk->bk", d_ns, negs)
+            grad_n = d_ns[:, :, None] * user[:, None, :]
+        grad_w = g * _ccl_rows(ps, ns, mu, theta)
+        return grad_u, grad_p, grad_n, grad_w
+
+    u_hat, p_hat, negs, inv_u, inv_p, inv_n, ps, ns, w = saved
+    n = ns.shape[-1]
+    d_ps = -g * w                                                 # (B,)
+    d_ns = (g * mu / n) * w[:, None] * (ns > theta).astype(u_hat.dtype)
+    # d cos(u,i)/du = (i_hat - cos * u_hat)/||u|| (Eq. 4); the negatives' i_hat
+    # is folded into the matmul coefficient (raw negs * inv_n), exactly as in
+    # the unweighted backward.
+    wn = d_ns * inv_n                                             # (B, n)
+    coeff = d_ps * ps + jnp.sum(d_ns * ns, axis=-1)               # (B,)
+    grad_u = inv_u[:, None] * (d_ps[:, None] * p_hat - coeff[:, None] * u_hat)
+    if shared:
+        grad_u = grad_u + inv_u[:, None] * (wn @ negs)
+        # grad_n_j sums every row's Eq. 5 contribution to the shared row j.
+        grad_n = wn.T @ u_hat - (jnp.sum(wn * ns, axis=0) * inv_n)[:, None] * negs
+    else:
+        grad_u = grad_u + jnp.einsum("bn,bnk->bk", wn * inv_u[:, None], negs)
+        grad_n = (wn[:, :, None] * u_hat[:, None, :]
+                  - (wn * ns * inv_n)[:, :, None] * negs)
+    grad_p = (d_ps * inv_p)[:, None] * (u_hat - ps[:, None] * p_hat)
+    grad_w = g * _ccl_rows(ps, ns, mu, theta)
+    return grad_u, grad_p, grad_n, grad_w
+
+
+ccl_loss_fused_w.defvjp(_ccl_w_fwd, _ccl_w_bwd)
+
+
+# ----------------------------------------------------------------------------
 # Baselines.
 # ----------------------------------------------------------------------------
 
-def ccl_loss_autodiff(user, pos, negs, mu=1.0, theta=0.0, similarity="cosine"):
-    """Same math, plain autodiff (no residual reuse).  The 'autograd' baseline."""
-    loss, _ = _ccl_fwd_impl(user, pos, negs, mu, theta, similarity)
-    return loss
+def ccl_loss_autodiff(user, pos, negs, mu=1.0, theta=0.0, similarity="cosine",
+                      mask=None):
+    """Same math, plain autodiff (no residual reuse).  The 'autograd' baseline.
+
+    Accepts both negative layouts ((B, n, K) per-example and (n, K) shared)
+    and an optional per-row mask.
+    """
+    ps, ns = _layout_sims(user, pos, negs, similarity)
+    if mask is None and negs.ndim == 3:
+        return _ccl_from_sims(ps, ns, mu, theta)
+    w = loss_weights(mask, user.shape[0], user.dtype)
+    return jnp.sum(_ccl_rows(ps, ns, mu, theta) * w)
 
 
-def ccl_loss_simplex_bmm(user, pos, negs, mu=1.0, theta=0.0):
+def ccl_loss_simplex_bmm(user, pos, negs, mu=1.0, theta=0.0, mask=None):
     """SimpleX-style concat+normalize+bmm forward (paper §3.2) + autodiff."""
-    pos_sim, neg_sim = simplex_bmm_similarity(user, pos, negs)
-    return _ccl_from_sims(pos_sim, neg_sim, mu, theta)
+    if negs.ndim == 2:
+        pos_sim, neg_sim = simplex_bmm_similarity_shared(user, pos, negs)
+    else:
+        pos_sim, neg_sim = simplex_bmm_similarity(user, pos, negs)
+    if mask is None:
+        return _ccl_from_sims(pos_sim, neg_sim, mu, theta)
+    w = loss_weights(mask, user.shape[0], user.dtype)
+    return jnp.sum(_ccl_rows(pos_sim, neg_sim, mu, theta) * w)
 
 
-def mse_loss_dot(user, pos, rating=1.0):
+def mse_loss_dot(user, pos, rating=1.0, mask=None):
     """CuMF_SGD-class baseline: dot-product similarity + MSE, one positive."""
     pred = jnp.sum(user * pos, axis=-1)
-    return jnp.mean((rating - pred) ** 2)
+    if mask is None:
+        return jnp.mean((rating - pred) ** 2)
+    w = loss_weights(mask, user.shape[0], user.dtype)
+    return jnp.sum(w * (rating - pred) ** 2)
 
 
 def bpr_loss(user, pos, negs):

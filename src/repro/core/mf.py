@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregation as agg
 from repro.core import samplers
-from repro.core.engine import StepEngine, resolve_engine
+from repro.core.engine import SampleContext, StepEngine, resolve_engine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,11 +36,11 @@ class MFConfig:
     similarity: str = "cosine"
     lr: float = 0.05
     # Execution backend (core/engine.py). ``backend`` picks the loss
-    # implementation, ``update_impl`` the row-update path, ``neg_source``
-    # where negatives are drawn from ("auto" = tile when one exists).
+    # implementation, ``update_impl`` the row-update path, ``sampler`` the
+    # registered NegativeSampler strategy ("auto" = tile when one exists).
     backend: str = "fused"
     update_impl: str = "scatter_add"
-    neg_source: str = "auto"
+    sampler: str = "auto"
     # Behavior aggregation (SimpleX). history_len 0 disables it (MF-CCL).
     history_len: int = 0
     aggregation_kind: str = "avg"
@@ -108,14 +108,16 @@ def _forward_loss(user_e, pos_e, neg_e, hist_e, hist_mask, aggregator, cfg: MFCo
 
 
 def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
-                    *, engine: Optional[StepEngine] = None):
+                    *, engine: Optional[StepEngine] = None,
+                    item_weights: Optional[jax.Array] = None):
     """One HEAT iteration.  Returns (new_state, loss).
 
     ``engine`` (core/engine.py) selects the loss implementation, the
-    row-update implementation, and the negative source; ``None`` resolves it
-    from ``cfg.backend`` / ``cfg.update_impl`` / ``cfg.neg_source``.  The
-    engine is static (resolved at trace time), so the step stays jit/pjit
-    compatible.
+    row-update implementation, and the NegativeSampler strategy; ``None``
+    resolves it from ``cfg.backend`` / ``cfg.update_impl`` / ``cfg.sampler``.
+    The engine is static (resolved at trace time), so the step stays jit/pjit
+    compatible.  ``item_weights`` (optional, (I,)) feeds the ``popularity``
+    sampler an empirical interaction distribution.
     """
     if engine is None:
         engine = resolve_engine(cfg)
@@ -126,16 +128,18 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     pos_e = params.item_table[batch.pos_ids]
     n_shape = (batch.user_ids.shape[0], cfg.num_negatives)
 
-    if engine.neg_source == "tile" and tile is None:
-        raise ValueError("engine requires neg_source='tile' but cfg.tile_size "
-                         "is 0 (no resident tile in the state)")
-    use_tile = tile is not None and engine.neg_source != "uniform"
-    if use_tile:
-        neg_ids, neg_e, neg_local = samplers.tile_sample(tile, r_neg, n_shape)
-    else:
-        neg_ids = samplers.sample_uniform(r_neg, cfg.num_items, n_shape)
-        neg_e = params.item_table[neg_ids]
-        neg_local = None
+    # Negative draw through the engine's sampler protocol: the context hands
+    # the strategy everything it may need (live table, resident tile, batch
+    # positives, popularity weights).  The tile is read back from the
+    # returned state (the protocol's slot for stateful strategies; shipped
+    # samplers leave it untouched) — write-through coherence and the refresh
+    # schedule stay below, after the gradient step.
+    drawn = engine.sampler.sample(
+        SampleContext(table=params.item_table, tile=tile,
+                      pos_ids=batch.pos_ids, weights=item_weights),
+        r_neg, n_shape)
+    neg_ids, neg_e, neg_local = drawn.ids, drawn.embs, drawn.local_idx
+    tile = drawn.state.tile
 
     hist_e = hist_mask = None
     if params.aggregator is not None:
@@ -208,14 +212,84 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     return new_state, loss
 
 
-def scores_all_items(params: MFParams, user_ids: jax.Array,
-                     similarity: str = "cosine") -> jax.Array:
-    """(B, I) scores for evaluation (Recall@K / NDCG@K)."""
-    u = params.user_table[user_ids]
-    t = params.item_table
-    s = u @ t.T
+def _score_item_block(u: jax.Array, block: jax.Array,
+                      similarity: str) -> jax.Array:
+    """(B, K) users x (C, K) item rows -> (B, C) scores."""
+    s = u @ block.T
     if similarity == "cosine":
         un = jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-12)
-        tn = jnp.linalg.norm(t, axis=-1).clip(1e-12)
-        s = s / un / tn[None, :]
+        bn = jnp.linalg.norm(block, axis=-1).clip(1e-12)
+        s = s / un / bn[None, :]
     return s
+
+
+def scores_all_items(params: MFParams, user_ids: jax.Array,
+                     similarity: str = "cosine", *,
+                     item_chunk: Optional[int] = None) -> jax.Array:
+    """(B, I) scores for evaluation (Recall@K / NDCG@K).
+
+    ``item_chunk`` computes the matrix block-by-block (bounded matmul
+    temporaries); the result is still (B, I) — use :func:`topk_all_items`
+    when only a top-k is needed and (B, I) must never exist at once.
+    """
+    u = params.user_table[user_ids]
+    t = params.item_table
+    if not item_chunk or item_chunk >= t.shape[0]:
+        return _score_item_block(u, t, similarity)
+    blocks = [_score_item_block(u, t[s:s + item_chunk], similarity)
+              for s in range(0, t.shape[0], item_chunk)]
+    return jnp.concatenate(blocks, axis=1)
+
+
+def topk_all_items(params: MFParams, user_ids: jax.Array, k: int, *,
+                   similarity: str = "cosine",
+                   item_chunk: Optional[int] = None,
+                   exclude_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Top-k item ids per user over the full catalog, chunked.
+
+    A running (B, k) top-k is merged with each (B, item_chunk) score block
+    inside a ``lax.fori_loop``, so the full (B, I) score matrix is **never
+    materialized** and the compiled program is O(1) in the chunk count — the
+    serving / full-catalog-evaluation path for paper-scale item counts (9.4M
+    items at Table 3 scale would be a 38 GB score matrix for a 1k-user
+    batch, and ~18k chunks must not unroll into the HLO).  ``exclude_mask``
+    (B, I) bool masks training positives (sliced per chunk, so it is read
+    but never duplicated).
+    """
+    u = params.user_table[user_ids]
+    t = params.item_table
+    num_items = t.shape[0]
+    c = item_chunk or num_items
+    if c >= num_items:
+        sc = _score_item_block(u, t, similarity)
+        if exclude_mask is not None:
+            sc = jnp.where(exclude_mask, -jnp.inf, sc)
+        return jax.lax.top_k(sc, k)[1]
+
+    num_chunks = -(-num_items // c)
+    pad = num_chunks * c - num_items
+    t_p = jnp.pad(t, ((0, pad), (0, 0)))
+    mask_p = (jnp.pad(exclude_mask, ((0, 0), (0, pad)), constant_values=True)
+              if exclude_mask is not None else None)
+    b = u.shape[0]
+
+    def body(i, carry):
+        best_s, best_i = carry
+        s0 = i * c
+        block = jax.lax.dynamic_slice_in_dim(t_p, s0, c, axis=0)
+        sc = _score_item_block(u, block, similarity)
+        ids = s0 + jnp.arange(c, dtype=jnp.int32)
+        dead = ids[None, :] >= num_items                 # padding rows
+        if mask_p is not None:
+            dead = dead | jax.lax.dynamic_slice_in_dim(mask_p, s0, c, axis=1)
+        sc = jnp.where(dead, -jnp.inf, sc.astype(best_s.dtype))
+        cat_s = jnp.concatenate([best_s, sc], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids[None, :],
+                                                          sc.shape)], axis=1)
+        best_s, idx = jax.lax.top_k(cat_s, k)
+        return best_s, jnp.take_along_axis(cat_i, idx, axis=1)
+
+    _, best_i = jax.lax.fori_loop(
+        0, num_chunks, body,
+        (jnp.full((b, k), -jnp.inf, u.dtype), jnp.zeros((b, k), jnp.int32)))
+    return best_i

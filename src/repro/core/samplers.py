@@ -46,11 +46,16 @@ def sample_unique(rng: jax.Array, num_items: int, n: int) -> jax.Array:
 
 
 class TileState(NamedTuple):
-    """State of one random-tiling sampler (per data shard, like per-thread)."""
+    """State of one random-tiling sampler (per data shard, like per-thread).
 
-    tile_ids: jax.Array    # (N1,) int32 — global item ids currently cached
-    tile_emb: jax.Array    # (N1, K) — replicated copy of those rows
-    step: jax.Array        # () int32 — iterations since last refresh
+    ``tile_emb`` may be ``None``: an **id-only tile** (the LM vocab tile)
+    restricts only the *sampling space* — embeddings are gathered through the
+    live table so gradients flow to it, and no replicated copy exists to keep
+    coherent.  The MF core uses the embedding-carrying form."""
+
+    tile_ids: jax.Array              # (N1,) int32 — global ids currently cached
+    tile_emb: Optional[jax.Array]    # (N1, K) replicated copy, or None (id-only)
+    step: jax.Array                  # () int32 — iterations since last refresh
 
 
 def tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int) -> TileState:
@@ -58,13 +63,23 @@ def tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int) -> TileStat
     return TileState(tile_ids=ids, tile_emb=item_table[ids], step=jnp.zeros((), jnp.int32))
 
 
+def id_tile_init(rng: jax.Array, num_items: int, tile_size: int) -> TileState:
+    """Id-only tile (no replicated embedding copy) — the LM-head vocab tile."""
+    return TileState(tile_ids=sample_unique(rng, num_items, tile_size),
+                     tile_emb=None, step=jnp.zeros((), jnp.int32))
+
+
 def tile_refresh(state: TileState, rng: jax.Array, item_table: jax.Array,
                  refresh_interval: int) -> TileState:
-    """Refresh the cached tile every ``refresh_interval`` steps (lax.cond)."""
+    """Refresh the cached tile every ``refresh_interval`` steps (lax.cond).
+
+    For an id-only tile (``tile_emb is None``) only the id set is redrawn;
+    ``item_table`` then contributes just the sampling-space size."""
 
     def do_refresh(s: TileState) -> TileState:
         ids = sample_unique(rng, item_table.shape[0], s.tile_ids.shape[0])
-        return TileState(tile_ids=ids, tile_emb=item_table[ids],
+        emb = None if s.tile_emb is None else item_table[ids]
+        return TileState(tile_ids=ids, tile_emb=emb,
                          step=jnp.zeros((), jnp.int32))
 
     def keep(s: TileState) -> TileState:

@@ -52,6 +52,32 @@ def pair_stats(user: jax.Array, pos: jax.Array, negs: jax.Array) -> SimilarityRe
     return SimilarityResiduals(uu=uu, pp=pp, up=up, nn=nn, un=un)
 
 
+def shared_pair_stats(user: jax.Array, pos: jax.Array,
+                      negs: jax.Array) -> SimilarityResiduals:
+    """The same fused pass for the *step-shared* negative layout.
+
+    user: (T, K), pos: (T, K), negs: (n, K) — one negative set shared by every
+    row (the LM-head / per-data-shard analogue of the paper's per-thread
+    negative set).  ``nn`` comes out (n,) and ``un`` (T, n); the cosine
+    formulas below broadcast ``inv_n`` over rows, so the downstream math is
+    identical to the per-example layout.
+    """
+    uu = jnp.sum(user * user, axis=-1)
+    pp = jnp.sum(pos * pos, axis=-1)
+    up = jnp.sum(user * pos, axis=-1)
+    nn = jnp.sum(negs * negs, axis=-1)                       # (n,)
+    un = user @ negs.T                                       # (T, n), MXU-shaped
+    return SimilarityResiduals(uu=uu, pp=pp, up=up, nn=nn, un=un)
+
+
+def layout_stats(user: jax.Array, pos: jax.Array,
+                 negs: jax.Array) -> SimilarityResiduals:
+    """Layout dispatch (static, on rank): (B, n, K) per-example negatives ->
+    ``pair_stats``; (n, K) step-shared negatives -> ``shared_pair_stats``."""
+    return pair_stats(user, pos, negs) if negs.ndim == 3 \
+        else shared_pair_stats(user, pos, negs)
+
+
 def cosine_from_stats_with_norms(res: SimilarityResiduals):
     """(pos_sim (B,), neg_sim (B,n), inv_u (B,), inv_p (B,), inv_n (B,n))
     from cached stats — the single definition of the cosine formula, shared
@@ -94,3 +120,15 @@ def simplex_bmm_similarity(user: jax.Array, pos: jax.Array, negs: jax.Array):
     c_n = cand / jnp.linalg.norm(cand, axis=-1, keepdims=True).clip(EPS)
     sims = jnp.einsum("bk,bmk->bm", u_n, c_n)                 # bmm
     return sims[:, 0], sims[:, 1:]
+
+
+def simplex_bmm_similarity_shared(user: jax.Array, pos: jax.Array,
+                                  negs: jax.Array):
+    """The SimpleX normalize-then-matmul baseline for the shared (n, K)
+    negative layout: normalized copies are materialized, then one (T,K)x(K,n)
+    matmul (there is no per-row candidate concat to do when negatives are
+    shared, so only the normalization memcpy survives)."""
+    u_n = user / jnp.linalg.norm(user, axis=-1, keepdims=True).clip(EPS)
+    p_n = pos / jnp.linalg.norm(pos, axis=-1, keepdims=True).clip(EPS)
+    n_n = negs / jnp.linalg.norm(negs, axis=-1, keepdims=True).clip(EPS)
+    return jnp.sum(u_n * p_n, axis=-1), u_n @ n_n.T

@@ -14,7 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.ccl_similarity import ccl_bwd_pallas, ccl_stats_pallas
+from repro.kernels.ccl_similarity import (
+    ccl_bwd_pallas,
+    ccl_bwd_shared_pallas,
+    ccl_stats_pallas,
+    ccl_stats_shared_pallas,
+)
 from repro.kernels.embedding_update import (
     gather_fma_rows,
     launch_count,
@@ -82,6 +87,62 @@ def make_ccl_loss_pallas(mu: float = 1.0, theta: float = 0.0,
                                     mu=mu, theta=theta, block_b=bb,
                                     interpret=interp)
         return du[:b], dp[:b], dn[:b]
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def _ccl_shared_fwd(user, pos, negs, w, mu, theta, block_b, interpret):
+    t = user.shape[0]
+    n = negs.shape[0]
+    bt = min(block_b, t)
+    tp = ((t + bt - 1) // bt) * bt
+    u_p, p_p = _pad_rows(user, tp), _pad_rows(pos, tp)
+    w_p = _pad_rows(w.reshape(t, 1).astype(jnp.float32), tp)  # pads carry w=0
+    uu, pp, up, nn, un = ccl_stats_shared_pallas(u_p, p_p, negs, block_b=bt,
+                                                 interpret=interpret)
+    inv_u = jax.lax.rsqrt(uu[:t] + EPS)
+    pos_sim = (up[:t] * inv_u * jax.lax.rsqrt(pp[:t] + EPS))[:, 0]
+    neg_sim = un[:t] * inv_u * jax.lax.rsqrt(nn + EPS)        # (T, n)
+    rows = ((1.0 - pos_sim)
+            + (mu / n) * jnp.sum(jnp.maximum(neg_sim - theta, 0.0), axis=-1))
+    loss = jnp.sum(rows * w.reshape(t))
+    return loss.astype(user.dtype), (u_p, p_p, uu, pp, up, nn, un, w_p, rows)
+
+
+def make_ccl_loss_shared_pallas(mu: float = 1.0, theta: float = 0.0,
+                                block_b: int = 256,
+                                interpret: bool | None = None):
+    """Factory for the *step-shared* negative layout (LM HEAT head).
+
+    ``fn(user (T,K), pos (T,K), negs (n,K), w (T,)) -> scalar`` — the weighted
+    CCL of ``core.losses.ccl_loss_fused_w``, with the stats forward and the
+    analytic Eq. 4/5 backward running as Pallas kernels.  ``w`` must already
+    be normalized (``core.losses.loss_weights``); masked rows (w=0) are
+    exactly dropped from loss and gradients, which is also what makes the
+    padded tile rows inert.
+    """
+    interp = default_interpret() if interpret is None else interpret
+
+    @jax.custom_vjp
+    def fn(user, pos, negs, w):
+        loss, _ = _ccl_shared_fwd(user, pos, negs, w, mu, theta, block_b,
+                                  interp)
+        return loss
+
+    def fwd(user, pos, negs, w):
+        loss, res = _ccl_shared_fwd(user, pos, negs, w, mu, theta, block_b,
+                                    interp)
+        return loss, (res, negs, user.shape[0])
+
+    def bwd(saved, g):
+        (u_p, p_p, uu, pp, up, nn, un, w_p, rows), negs, t = saved
+        bt = min(block_b, u_p.shape[0])
+        du, dp, dn = ccl_bwd_shared_pallas(
+            u_p, p_p, negs, uu, pp, up, nn, un, w_p,
+            jnp.asarray(g, jnp.float32), mu=mu, theta=theta, block_b=bt,
+            interpret=interp)
+        return du[:t], dp[:t], dn.astype(negs.dtype), (g * rows).astype(u_p.dtype)
 
     fn.defvjp(fwd, bwd)
     return fn

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.heat_head import HeadTileState
+from repro.core.samplers import TileState
 from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.models.config import SHAPES, ArchConfig, ShapeConfig
@@ -50,9 +50,10 @@ def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
 def tile_abstract(cfg: ArchConfig):
     if not (cfg.heat.enabled and cfg.heat.tile_size):
         return None, None
-    tile = HeadTileState(jax.ShapeDtypeStruct((cfg.heat.tile_size,), jnp.int32),
-                         jax.ShapeDtypeStruct((), jnp.int32))
-    return tile, HeadTileState(P(), P())
+    # Id-only vocab tile (samplers.TileState with tile_emb=None).
+    tile = TileState(jax.ShapeDtypeStruct((cfg.heat.tile_size,), jnp.int32),
+                     None, jax.ShapeDtypeStruct((), jnp.int32))
+    return tile, TileState(P(), None, P())
 
 
 def resolve_tree(spec_tree, mesh: Mesh, abs_tree=None):

@@ -37,13 +37,16 @@ def main():
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--backend", default=None,
-                    help="MF loss backend (engine.LOSS_IMPLS): fused, "
-                         "autodiff, simplex_bmm, mse_dot, pallas")
+                    help="loss backend (engine.LOSS_IMPLS): fused, autodiff, "
+                         "simplex_bmm, mse_dot, pallas — applies to the MF "
+                         "engine and the LM HEAT head alike")
     ap.add_argument("--update-impl", default=None,
                     help="MF row-update impl: scatter_add, pallas, dense")
-    ap.add_argument("--neg-source", default=None,
-                    choices=["auto", "uniform", "tile"],
-                    help="negative sampling source (default: auto)")
+    ap.add_argument("--sampler", default=None,
+                    choices=["auto", "uniform", "tile", "popularity",
+                             "in_batch"],
+                    help="negative-sampling strategy (engine.SAMPLERS, "
+                         "default: auto)")
     args = ap.parse_args()
 
     from repro.distributed import sharding as shd
@@ -62,7 +65,7 @@ def main():
                 MF_100M, num_users=2000, num_items=4000, emb_dim=64)
             overrides = {k: v for k, v in (
                 ("backend", args.backend), ("update_impl", args.update_impl),
-                ("neg_source", args.neg_source)) if v}
+                ("sampler", args.sampler)) if v}
             if overrides:
                 cfg = dataclasses.replace(cfg, **overrides)
             engine = resolve_engine(cfg)
@@ -80,6 +83,17 @@ def main():
             cfg = get_config(args.arch)
             if args.reduced:
                 cfg = cfg.reduced()
+            # The LM HEAT head resolves from the same registries as the MF
+            # engine: --backend / --sampler select its loss and strategy too.
+            heat_over = {k: v for k, v in (
+                ("backend", args.backend), ("sampler", args.sampler)) if v}
+            if heat_over:
+                cfg = dataclasses.replace(
+                    cfg, heat=dataclasses.replace(cfg.heat, **heat_over))
+            if args.loss == "heat":
+                from repro.core.engine import resolve_engine
+                print("[launch] LM head engine: "
+                      f"{resolve_engine(cfg.heat).name}")
             opts = lm.TrainOptions(loss=args.loss, remat=args.remat,
                                    attn_chunk=min(1024, args.seq))
             tcfg = trainer.TrainerConfig(

@@ -22,6 +22,10 @@ class HeatConfig:
     theta: float = 0.0
     tile_size: int = 2048
     refresh_interval: int = 1024
+    # Unified engine selection (core/engine.py): loss implementation and
+    # negative-sampling strategy, shared with the MF core's registries.
+    backend: str = "fused"
+    sampler: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

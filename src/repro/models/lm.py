@@ -422,7 +422,9 @@ def head_loss(params: dict, h: jax.Array, labels: jax.Array, cfg: ArchConfig,
         hcfg = HeatHeadConfig(num_negatives=cfg.heat.num_negatives,
                               mu=cfg.heat.mu, theta=cfg.heat.theta,
                               tile_size=cfg.heat.tile_size,
-                              refresh_interval=cfg.heat.refresh_interval)
+                              refresh_interval=cfg.heat.refresh_interval,
+                              backend=cfg.heat.backend,
+                              sampler=cfg.heat.sampler)
         return sampled_ccl_loss(h, labels, table, rng, hcfg, tile, mask)
     return full_softmax_loss(h, labels, table, mask), tile
 

@@ -23,7 +23,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import heat_head, mf
+from repro.core import mf, samplers
 from repro.core.engine import StepEngine, resolve_engine
 from repro.data import pipeline
 from repro.models import lm
@@ -56,7 +56,7 @@ class TrainerConfig:
 class LMTrainState(NamedTuple):
     params: Any
     opt_state: Any
-    tile: Any                   # HeadTileState or None
+    tile: Any                   # id-only samplers.TileState or None
     step: jax.Array
 
 
@@ -109,7 +109,7 @@ def init_lm_state(rng: jax.Array, cfg: ArchConfig, opts: lm.TrainOptions,
                   optimizer: Optimizer, dtype=jnp.float32) -> LMTrainState:
     kp, kt = jax.random.split(rng)
     params = lm.init_params(kp, cfg, dtype)
-    tile = (heat_head.head_tile_init(kt, cfg.vocab, cfg.heat.tile_size)
+    tile = (samplers.id_tile_init(kt, cfg.vocab, cfg.heat.tile_size)
             if (opts.loss == "heat" and cfg.heat.enabled and cfg.heat.tile_size)
             else None)
     return LMTrainState(params, optimizer.init(params), tile,
@@ -126,7 +126,7 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
     state = init_lm_state(rng, cfg, opts, optimizer)
     start = 0
 
-    if tcfg.ckpt_dir and (s := ckpt.latest_step(tcfg.ckpt_dir)) is not None:
+    if tcfg.ckpt_dir and ckpt.latest_step(tcfg.ckpt_dir) is not None:
         state, start, _ = ckpt.restore(tcfg.ckpt_dir, state)
         log(f"[trainer] resumed from step {start}")
 
@@ -168,22 +168,25 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
 def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
              batch_size: int = 256, seed: int = 0,
              engine: Optional[StepEngine] = None,
+             item_weights=None,
              ckpt_dir: Optional[str] = None,
              ckpt_every: int = 200, fail_at_step: Optional[int] = None,
              log: Callable[[str], None] = print):
     """HEAT CF training (Fig. 3 loop) with the same fault-tolerance contract.
 
     ``engine`` picks the execution backend (core/engine.py); by default it is
-    resolved from ``cfg.backend`` / ``cfg.update_impl`` / ``cfg.neg_source``.
+    resolved from ``cfg.backend`` / ``cfg.update_impl`` / ``cfg.sampler``.
+    ``item_weights`` (optional (I,)) feeds the ``popularity`` sampler.
     """
     if engine is None:
         engine = resolve_engine(cfg)
     rng = jax.random.PRNGKey(seed)
     state = mf.init_mf(rng, cfg)
-    step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, engine=engine),
+    step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, engine=engine,
+                              item_weights=item_weights),
                       donate_argnums=(0,))
     start = 0
-    if ckpt_dir and (s := ckpt.latest_step(ckpt_dir)) is not None:
+    if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
         state, start, _ = ckpt.restore(ckpt_dir, state)
         log(f"[mf] resumed from step {start}")
 

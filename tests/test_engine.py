@@ -1,8 +1,7 @@
-"""Execution-backend layer (core/engine.py): registry resolution, one-step
-smoke for every advertised combination, and gradient/update parity of the
-Pallas fused-kernel backend against the jnp-fused reference (interpret mode
-on CPU)."""
-import dataclasses
+"""Unified sampled-objective engine (core/engine.py): registry resolution,
+one-step smoke for every advertised combination, the NegativeSampler
+protocol's support guarantees, and loss parity across backends on BOTH
+negative layouts — per-example (B, n, K) and step-shared (n, K)."""
 import functools
 import itertools
 
@@ -13,6 +12,9 @@ import pytest
 
 from repro.core import mf
 from repro.core.engine import (
+    SAMPLERS,
+    NegativeSampler,
+    SampleContext,
     StepEngine,
     available_backends,
     resolve_engine,
@@ -39,8 +41,9 @@ def _batch(b=8, seed=0, items=64, users=48, hist=0):
 def test_resolve_from_config_defaults():
     eng = resolve_engine(_cfg())
     assert isinstance(eng, StepEngine)
-    assert (eng.backend, eng.update_impl, eng.neg_source) == \
+    assert (eng.backend, eng.update_impl, eng.sampler_name) == \
         ("fused", "scatter_add", "auto")
+    assert isinstance(eng.sampler, NegativeSampler)
 
 
 def test_resolve_kwargs_override_config():
@@ -52,16 +55,28 @@ def test_resolve_kwargs_override_config():
 
 @pytest.mark.parametrize("field,value", [("backend", "nope"),
                                          ("update_impl", "nope"),
-                                         ("neg_source", "nope")])
+                                         ("sampler", "nope")])
 def test_resolve_rejects_unknown(field, value):
     with pytest.raises(ValueError, match="nope"):
         resolve_engine(_cfg(), **{field: value})
 
 
+def test_resolve_rejects_legacy_neg_source_config():
+    """The removed neg_source string field gets a migration error, not a
+    silent fallback."""
+    class Legacy:
+        backend = "fused"
+        neg_source = "tile"
+
+    with pytest.raises(ValueError, match="neg_source.*sampler"):
+        resolve_engine(Legacy())
+
+
 def test_every_advertised_combination_runs_one_step():
     """Registry contract: each (backend, update_impl) pair resolves and takes
-    a finite training step (neg_source='auto', tile present)."""
+    a finite training step (sampler='auto', tile present)."""
     adv = available_backends()
+    assert set(adv) == {"backend", "update_impl", "sampler"}
     cfg = _cfg(tile_size=16, refresh_interval=100)
     state = mf.init_mf(jax.random.PRNGKey(0), cfg)
     batch = _batch()
@@ -76,10 +91,90 @@ def test_every_advertised_combination_runs_one_step():
             state.params.user_table.shape, eng.name
 
 
-def test_neg_source_uniform_ignores_tile():
-    """neg_source='uniform' must sample from the full item space even when a
+def test_every_sampler_runs_one_step():
+    """The sampler axis of the combination matrix: every registered strategy
+    takes a finite training step through the default loss/update."""
+    adv = available_backends()
+    cfg = _cfg(tile_size=16, refresh_interval=100)
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    batch = _batch()
+    for samp in adv["sampler"]:
+        eng = resolve_engine(cfg, sampler=samp)
+        _, loss = jax.jit(functools.partial(
+            mf.heat_train_step, cfg=cfg, engine=eng))(
+                state, batch, jax.random.PRNGKey(1))
+        assert np.isfinite(float(loss)), eng.name
+
+
+# ----------------------------------------------------------------------------
+# Loss parity across backends, both layouts (the shape-polymorphic contract).
+# ----------------------------------------------------------------------------
+
+def _layout_data(layout, seed=0, b=12, n=5, k=16):
+    r = jax.random.PRNGKey(seed)
+    u = jax.random.normal(r, (b, k))
+    p = jax.random.normal(jax.random.fold_in(r, 1), (b, k))
+    shape = (n, k) if layout == "head" else (b, n, k)
+    negs = jax.random.normal(jax.random.fold_in(r, 2), shape)
+    return u, p, negs
+
+
+@pytest.mark.parametrize("layout", ["mf", "head"])
+@pytest.mark.parametrize("backend", ["fused", "pallas"])
+@pytest.mark.parametrize("masked", [False, True])
+def test_loss_backend_parity_both_layouts(backend, layout, masked):
+    """fused / pallas(interpret) agree with plain autodiff on loss AND all
+    three gradients, for per-example (B, n, K) and shared (n, K) negatives,
+    with and without a mask — one registration, both callers."""
+    if backend == "pallas" and layout == "mf" and masked:
+        pytest.skip("pallas per-example layout is unmasked by contract")
+    u, p, negs = _layout_data(layout)
+    mask = (jnp.asarray(np.random.default_rng(0).integers(0, 2, u.shape[0]),
+                        jnp.float32) if masked else None)
+
+    def run(name):
+        loss_fn = resolve_engine(_cfg(), backend=name).loss_fn
+
+        def f(uu, pp, nn):
+            return loss_fn(uu, pp, nn, mu=0.9, theta=0.1,
+                           similarity="cosine", mask=mask)
+
+        return jax.value_and_grad(f, argnums=(0, 1, 2))(u, p, negs)
+
+    l_ref, g_ref = run("autodiff")
+    l_got, g_got = run(backend)
+    np.testing.assert_allclose(float(l_ref), float(l_got), atol=1e-5)
+    for a, b_ in zip(g_ref, g_got):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["fused", "autodiff", "simplex_bmm",
+                                     "mse_dot", "pallas"])
+def test_every_loss_registration_serves_shared_layout(backend):
+    """Every advertised backend evaluates the LM head's (n, K) layout and is
+    differentiable through it."""
+    u, p, negs = _layout_data("head")
+    loss_fn = resolve_engine(_cfg(), backend=backend).loss_fn
+    loss, grads = jax.value_and_grad(
+        lambda *a: loss_fn(*a, mu=1.0, theta=0.0, similarity="cosine"),
+        argnums=(0, 1, 2))(u, p, negs)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all() for g in grads)
+
+
+# ----------------------------------------------------------------------------
+# Sampler protocol: support guarantees.
+# ----------------------------------------------------------------------------
+
+def _ctx(items=64, k=8, seed=0, **kw):
+    table = jax.random.normal(jax.random.PRNGKey(seed), (items, k))
+    return SampleContext(table=table, **kw)
+
+
+def test_sampler_uniform_ignores_tile():
+    """sampler='uniform' must sample from the full item space even when a
     tile exists — trajectories match the tileless config's negatives."""
-    cfg_tile = _cfg(tile_size=16, refresh_interval=100, neg_source="uniform")
+    cfg_tile = _cfg(tile_size=16, refresh_interval=100, sampler="uniform")
     cfg_flat = _cfg()
     s_tile = mf.init_mf(jax.random.PRNGKey(0), cfg_tile)
     s_flat = mf.init_mf(jax.random.PRNGKey(0), cfg_flat)
@@ -91,18 +186,91 @@ def test_neg_source_uniform_ignores_tile():
     np.testing.assert_allclose(l_tile, l_flat, atol=1e-6)
 
 
-def test_neg_source_tile_requires_tile():
-    cfg = _cfg(neg_source="tile")        # tile_size = 0 -> no tile in state
+def test_sampler_tile_requires_tile():
+    cfg = _cfg(sampler="tile")           # tile_size = 0 -> no tile in state
     state = mf.init_mf(jax.random.PRNGKey(0), cfg)
     with pytest.raises(ValueError, match="tile"):
         mf.heat_train_step(state, _batch(), jax.random.PRNGKey(0), cfg)
 
 
+def test_sampler_in_batch_requires_pos_ids():
+    with pytest.raises(ValueError, match="pos_ids"):
+        SAMPLERS["in_batch"].sample(_ctx(), jax.random.PRNGKey(0), (4,))
+
+
+@pytest.mark.parametrize("shape", [(6,), (8, 6)])
+def test_popularity_sampler_support_with_weights(shape):
+    """With explicit weights, popularity draws only from the nonzero
+    support."""
+    items = 64
+    support = np.arange(10, 20)
+    w = np.zeros(items, np.float32)
+    w[support] = np.arange(1, 11)
+    drawn = SAMPLERS["popularity"].sample(
+        _ctx(items=items, weights=jnp.asarray(w)), jax.random.PRNGKey(1),
+        shape)
+    ids = np.asarray(drawn.ids)
+    assert ids.shape == shape
+    assert set(ids.ravel()) <= set(support.tolist())
+    np.testing.assert_array_equal(np.asarray(drawn.embs),
+                                  np.asarray(drawn.state.table)[ids])
+
+
+def test_popularity_sampler_log_uniform_default_is_skewed():
+    """Without weights the Zipfian fallback stays in range and prefers low
+    ids (frequency-sorted convention): the sample mean lands well below the
+    uniform expectation."""
+    items = 1000
+    drawn = SAMPLERS["popularity"].sample(
+        _ctx(items=items), jax.random.PRNGKey(2), (4096,))
+    ids = np.asarray(drawn.ids)
+    assert ids.min() >= 0 and ids.max() < items
+    assert ids.mean() < items / 2 * 0.6          # uniform would be ~500
+
+
+def test_in_batch_sampler_support_is_batch_positives():
+    """in_batch negatives come from the batch's own positives; the
+    per-example layout excludes each row's own batch slot (with distinct
+    positives, as here, that means row i never draws its own positive —
+    duplicate positives can still collide by design)."""
+    pos = jnp.asarray([3, 7, 11, 20, 33, 41], jnp.int32)
+    ctx = _ctx(pos_ids=pos)
+    # Shared (n,) draw: support is the positive set.
+    shared = SAMPLERS["in_batch"].sample(ctx, jax.random.PRNGKey(0), (32,))
+    assert set(np.asarray(shared.ids).tolist()) <= set(np.asarray(pos).tolist())
+    # Per-example (B, n) draw: support holds AND row i excludes pos[i].
+    per = SAMPLERS["in_batch"].sample(ctx, jax.random.PRNGKey(1),
+                                      (pos.shape[0], 16))
+    ids = np.asarray(per.ids)
+    assert set(ids.ravel().tolist()) <= set(np.asarray(pos).tolist())
+    for i, row in enumerate(ids):
+        assert int(pos[i]) not in row.tolist()
+
+
+def test_tile_sampler_id_only_gathers_through_table():
+    """An id-only tile (tile_emb=None, the LM vocab tile) restricts the
+    sampling space but reads embeddings from the live table (gradient
+    path)."""
+    from repro.core import samplers as smp
+    tile = smp.id_tile_init(jax.random.PRNGKey(0), 64, 8)
+    ctx = _ctx(items=64, tile=tile)
+    drawn = SAMPLERS["tile"].sample(ctx, jax.random.PRNGKey(1), (16,))
+    ids = np.asarray(drawn.ids)
+    assert set(ids.tolist()) <= set(np.asarray(tile.tile_ids).tolist())
+    np.testing.assert_array_equal(np.asarray(drawn.embs),
+                                  np.asarray(ctx.table)[ids])
+    assert drawn.local_idx is not None
+
+
+# ----------------------------------------------------------------------------
+# End-to-end engine paths (unchanged contracts from the pre-redesign engine).
+# ----------------------------------------------------------------------------
+
 @pytest.mark.parametrize("hist", [0, 4])
 def test_pallas_backend_parity_with_fused(hist):
-    """Acceptance: backend='pallas' (fused fwd+bwd kernels + gather-FMA row
-    update, interpret mode on CPU) matches the jnp-fused engine's per-step
-    loss and updated tables within 1e-4 over several steps."""
+    """backend='pallas' (fused fwd+bwd kernels + gather-FMA row update,
+    interpret mode on CPU) matches the jnp-fused engine's per-step loss and
+    updated tables within 1e-4 over several steps."""
     cfg = _cfg(history_len=hist, flush_every=2)
     e_ref = resolve_engine(cfg, backend="fused", update_impl="scatter_add")
     e_pal = resolve_engine(cfg, backend="pallas", update_impl="pallas")
@@ -124,8 +292,8 @@ def test_pallas_backend_parity_with_fused(hist):
 
 
 def test_pallas_trains_end_to_end_in_train_mf():
-    """Acceptance: backend='pallas' goes through trainer.train_mf on CPU via
-    interpret mode and the loss decreases."""
+    """backend='pallas' goes through trainer.train_mf on CPU via interpret
+    mode and the loss decreases."""
     from repro.data import pipeline
     from repro.train import trainer
     cfg = _cfg(backend="pallas", update_impl="pallas", num_users=32,
@@ -139,11 +307,11 @@ def test_pallas_trains_end_to_end_in_train_mf():
 
 
 def test_row_update_many_cross_group_duplicate_ids_bit_parity():
-    """Acceptance: an item id appearing in BOTH the pos and neg gradient
-    groups must accumulate both contributions (scatter-add semantics across
-    the cross-group pre-reduce).  All values are exactly representable
-    (integer tables/grads, power-of-two lr), so every impl — chained or
-    single-launch — must produce the *bit-identical* table."""
+    """An item id appearing in BOTH the pos and neg gradient groups must
+    accumulate both contributions (scatter-add semantics across the
+    cross-group pre-reduce).  All values are exactly representable (integer
+    tables/grads, power-of-two lr), so every impl — chained or single-launch
+    — must produce the *bit-identical* table."""
     cfg = _cfg()
     table = jnp.arange(64 * 16, dtype=jnp.float32).reshape(64, 16)
     r = np.random.default_rng(7)

@@ -1,18 +1,19 @@
 """HEAT sampled-CCL LM head (repro.core.heat_head) — the paper's technique as
-an LM feature: gradient flow, tile schedule, masking, softmax-baseline parity.
+an LM feature, now resolved from the unified engine registries: gradient
+flow, tile schedule, masking, softmax-baseline parity, and backend parity on
+the step-shared negative layout.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core import samplers
 from repro.core.heat_head import (
-    HeadTileState,
     HeatHeadConfig,
     full_softmax_loss,
-    head_tile_init,
-    head_tile_refresh,
     sampled_ccl_loss,
 )
 
@@ -43,10 +44,50 @@ def test_gradients_reach_table_and_hidden():
     assert touched_rows <= t.size + cfg.num_negatives
 
 
+def test_no_private_loss_or_tile_in_heat_head():
+    """Acceptance (ISSUE 3): heat_head carries no loss math or tile type of
+    its own — it resolves everything from core.engine's registries and
+    core.samplers' TileState."""
+    import inspect
+
+    from repro.core import heat_head
+    src = inspect.getsource(heat_head)
+    assert "HeadTileState" not in src
+    assert "resolve_engine" in src
+    assert not hasattr(heat_head, "head_tile_init")
+    assert not hasattr(heat_head, "head_tile_refresh")
+
+
+@pytest.mark.parametrize("backend", ["fused", "autodiff", "pallas"])
+def test_head_backend_parity(backend):
+    """Every loss backend produces the same head loss and table gradient for
+    the same rng (the draw is engine-independent) — the Pallas fused CCL
+    kernels are reachable from LM training."""
+    h, t, table = _data()
+    rng = jax.random.PRNGKey(7)
+    mask = jnp.ones(t.shape).at[:, -2:].set(0)
+
+    def run(name):
+        cfg = HeatHeadConfig(num_negatives=8, backend=name)
+
+        def loss(tab):
+            l, _ = sampled_ccl_loss(h, t, tab, rng, cfg, mask=mask)
+            return l
+
+        return jax.value_and_grad(loss)(table)
+
+    l_ref, g_ref = run("autodiff")
+    l_got, g_got = run(backend)
+    np.testing.assert_allclose(float(l_ref), float(l_got), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_got),
+                               atol=1e-5)
+
+
 def test_loss_decreases_under_sgd():
     h, t, table = _data()
     cfg = HeatHeadConfig(num_negatives=8, tile_size=32, refresh_interval=4)
-    tile = head_tile_init(jax.random.PRNGKey(9), table.shape[0], cfg.tile_size)
+    tile = samplers.id_tile_init(jax.random.PRNGKey(9), table.shape[0],
+                                 cfg.tile_size)
 
     def loss(tab, tl, rng):
         return sampled_ccl_loss(h, t, tab, rng, cfg, tl)
@@ -64,12 +105,17 @@ def test_loss_decreases_under_sgd():
 @settings(deadline=None, max_examples=10)
 @given(interval=st.integers(2, 8), steps=st.integers(1, 20))
 def test_head_tile_schedule(interval, steps):
-    tile = head_tile_init(jax.random.PRNGKey(0), 100, 16)
+    """The id-only vocab tile follows the §4.2 refresh schedule through the
+    shared samplers.tile_refresh (tile_emb stays None throughout)."""
+    table = jnp.zeros((100, 4))
+    tile = samplers.id_tile_init(jax.random.PRNGKey(0), 100, 16)
     for i in range(steps):
-        tile = head_tile_refresh(tile, jax.random.fold_in(jax.random.PRNGKey(1), i),
-                                 100, interval)
+        tile = samplers.tile_refresh(
+            tile, jax.random.fold_in(jax.random.PRNGKey(1), i), table,
+            interval)
     assert int(tile.step) == steps % interval
     assert np.asarray(tile.tile_ids).max() < 100
+    assert tile.tile_emb is None
 
 
 def test_mask_excludes_padding():

@@ -70,6 +70,23 @@ def test_heat_head_training_runs():
     assert losses[-1] < losses[0], losses
 
 
+def test_heat_head_trains_through_pallas_backend():
+    """Acceptance (ISSUE 3): an LM forward with loss='heat' trains end-to-end
+    through backend='pallas' (interpret mode on CPU) — the fused CCL kernels
+    reached from LM training via the unified engine."""
+    cfg = _small_cfg()
+    cfg = dataclasses.replace(
+        cfg, heat=dataclasses.replace(cfg.heat, backend="pallas",
+                                      num_negatives=8, tile_size=32,
+                                      refresh_interval=8))
+    _, losses = trainer.train_lm(cfg, dataclasses.replace(OPTS, loss="heat"),
+                                 _tcfg(steps=8, lr=0.3, fixed_batch=True,
+                                       optimizer="sgd"),
+                                 log=lambda *_: None)
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], losses
+
+
 def test_grad_accum_matches_big_batch_direction():
     """grad_accum=2 over 2x microbatches: loss decreases the same way."""
     import numpy as _np
