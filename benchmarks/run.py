@@ -24,6 +24,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     suites = [
         ("epoch_time(fig6/7)", bench_epoch_time.run),
+        ("loop(dispatch-windows)", bench_epoch_time.run_loop),
         ("breakdown(tab2/4,fig8)", bench_breakdown.run),
         ("tiling(fig10/11,tab6)", bench_tiling.run),
         ("aggregation(tab7)", bench_aggregation.run),

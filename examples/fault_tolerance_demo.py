@@ -21,14 +21,17 @@ def main():
         shutil.rmtree(d, ignore_errors=True)
     cfg = get_config("smollm-360m").reduced()
     opts = lm.TrainOptions(loss="heat", remat="none", attn_chunk=8)
+    # steps_per_dispatch > 1: the EpochExecutor scans multi-step dispatch
+    # windows; checkpoints land on window edges and the injected failure
+    # (step 13, mid-window) truncates its window so restore stays bit-exact.
     base = dict(steps=20, lr=1e-2, batch_size=4, seq_len=32, log_every=5,
-                ckpt_every=5)
+                ckpt_every=5, steps_per_dispatch=8)
 
     print("--- clean run (no failures) ---")
     clean, _ = trainer.train_lm(cfg, opts, trainer.TrainerConfig(
         ckpt_dir=CKPT_A, **base))
 
-    print("--- faulty run (injected node failure at step 13) ---")
+    print("--- faulty run (injected node failure at step 13, mid-window) ---")
     crashed, _ = trainer.train_lm(cfg, opts, trainer.TrainerConfig(
         ckpt_dir=CKPT_B, fail_at_step=13, **base))
 

@@ -48,6 +48,7 @@ def main():
     t0 = time.time()
     state, losses = trainer.train_mf(cfg, ds, steps=args.steps,
                                      batch_size=args.batch, engine=engine,
+                                     steps_per_dispatch=25,
                                      ckpt_dir=args.ckpt_dir, ckpt_every=100)
     dt = time.time() - t0
     print(f"{args.steps} steps in {dt:.1f}s "

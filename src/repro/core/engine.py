@@ -200,6 +200,15 @@ class AutoSampler:
         return impl.sample(state, rng, shape)
 
 
+def popularity_logits(weights: jax.Array) -> jax.Array:
+    """Unnormalized (I,) interaction counts -> categorical log-weights
+    (zeros excluded).  The one definition of the ``popularity`` sampler's
+    weight transform, shared with callers that hold device-resident counts
+    (``pipeline.DeviceCFDataset.item_weights``)."""
+    w = weights.astype(jnp.float32)
+    return jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
+
+
 @register_sampler("popularity")
 class PopularitySampler:
     """Popularity-proportional negatives (Chen et al. 2017 §5: popularity-
@@ -219,9 +228,8 @@ class PopularitySampler:
     def sample(self, state, rng, shape):
         num = state.table.shape[0]
         if state.weights is not None:
-            w = state.weights.astype(jnp.float32)
-            logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
-            ids = jax.random.categorical(rng, logits, shape=shape)
+            ids = jax.random.categorical(rng, popularity_logits(state.weights),
+                                         shape=shape)
             ids = ids.astype(jnp.int32)
         else:
             u = jax.random.uniform(rng, shape)

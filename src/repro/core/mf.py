@@ -212,6 +212,36 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     return new_state, loss
 
 
+def make_scan_body(cfg: MFConfig, batch_fn, seed: int, *,
+                   engine: Optional[StepEngine] = None,
+                   item_weights: Optional[jax.Array] = None):
+    """``body(state, step) -> (state, loss)`` — the in-scan form of
+    :func:`heat_train_step` for the ``EpochExecutor``'s dispatch windows.
+
+    ``batch_fn(step)`` builds the batch from a *traced* step index (e.g.
+    ``pipeline.cf_batch_device`` over a device-resident dataset), and the
+    per-step rng is ``fold_in(PRNGKey(seed), step)`` — exactly the derivation
+    the per-step driver loop uses, so a scanned window reproduces the
+    per-step trajectory bit-for-bit and a restart is pure in (seed, step).
+    Every engine combination is scan-carry-compatible: ``MFState`` threads
+    the tile and aggregator-accumulator states functionally, the engine (and
+    ``item_weights``, e.g. ``DeviceCFDataset.item_weights`` feeding the
+    ``popularity`` sampler) is a static closure, and branch structure
+    resolves at trace time.
+    """
+    if engine is None:
+        engine = resolve_engine(cfg)
+    base = jax.random.PRNGKey(seed)
+
+    def body(state: MFState, step: jax.Array):
+        batch = batch_fn(step)
+        rng = jax.random.fold_in(base, step)
+        return heat_train_step(state, batch, rng, cfg, engine=engine,
+                               item_weights=item_weights)
+
+    return body
+
+
 def _score_item_block(u: jax.Array, block: jax.Array,
                       similarity: str) -> jax.Array:
     """(B, K) users x (C, K) item rows -> (B, C) scores."""

@@ -3,6 +3,19 @@
 Determinism & restart: every batch is a pure function of (seed, step), so a
 job restored from a step-N checkpoint resumes on exactly the batch it would
 have seen — no iterator state to persist (DESIGN.md §5 fault tolerance).
+The (seed, step) mix is an **explicit stable derivation** — counter-based
+threefry ``fold_in(PRNGKey(seed), step)`` — never CPython ``hash`` (tuple
+hashes are an implementation detail and string hashes are salted per
+process, so a restart could silently resume on different data).
+
+Steady-state training does not run host numpy at all: a
+:class:`DeviceCFDataset` keeps ``train_pos`` (and popularity weights) as
+device arrays and :func:`cf_batch_device` is jit/scan-traceable, so the
+``EpochExecutor`` (train/trainer.py) samples batches *inside* the compiled
+dispatch window.  The host-side :func:`cf_batch` evaluates the same
+derivation eagerly — host and device batches are bit-identical
+(tests/test_pipeline.py), which is what lets the per-step loop and the
+scanned executor produce the same trajectory.
 
 CF generator: power-law item popularity + per-user preference clusters so
 that embeddings are learnable (recall rises above the random baseline within
@@ -11,6 +24,8 @@ a few hundred steps — exercised by benchmarks/bench_accuracy.py).
 from __future__ import annotations
 
 import dataclasses
+import weakref
+import zlib
 from typing import Iterator, Optional
 
 import jax
@@ -73,25 +88,88 @@ def synth_cf_dataset(num_users: int, num_items: int, *, seed: int = 0,
     return CFDataset(num_users, num_items, train, test)
 
 
-def cf_batch(ds: CFDataset, step: int, batch_size: int, history_len: int = 0,
-             seed: int = 0) -> Batch:
-    """Pure function of (seed, step): sample users + one train positive each."""
-    rng = np.random.default_rng(hash((seed, step)) % (2 ** 63))
-    users = rng.integers(0, ds.num_users, batch_size).astype(np.int32)
-    cols = rng.integers(0, ds.train_pos.shape[1], batch_size)
-    pos = ds.train_pos[users, cols]
+@dataclasses.dataclass(frozen=True)
+class DeviceCFDataset:
+    """Device-resident view of a :class:`CFDataset` (the executor's input).
+
+    ``train_pos`` lives on the accelerator so in-scan batch sampling never
+    copies from the host; ``item_weights`` holds the empirical interaction
+    counts (the ``popularity`` sampler's natural weights) as a device array
+    for the same reason.  Static ints stay Python ints — they size the
+    compiled program, they are not traced."""
+
+    num_users: int
+    num_items: int
+    train_pos: jax.Array            # (num_users, max_train) int32, -1 padded
+    item_weights: jax.Array         # (num_items,) float32 interaction counts
+
+
+_DEVICE_VIEWS: dict[int, DeviceCFDataset] = {}
+
+
+def device_cf_dataset(ds: CFDataset) -> DeviceCFDataset:
+    """Upload ``train_pos`` + popularity weights once, ahead of the epoch.
+
+    Memoized per ``CFDataset`` instance (dropped when the dataset is
+    garbage-collected), so repeated callers — the executor, the per-step
+    ``cf_batch``, popularity-weight consumers — share one device copy
+    instead of re-uploading the table.  Datasets are treated as immutable.
+    """
+    view = _DEVICE_VIEWS.get(id(ds))
+    if view is None:
+        valid = ds.train_pos[ds.train_pos >= 0]
+        counts = np.bincount(valid.ravel(), minlength=ds.num_items)
+        view = DeviceCFDataset(ds.num_users, ds.num_items,
+                               jnp.asarray(ds.train_pos, jnp.int32),
+                               jnp.asarray(counts, jnp.float32))
+        _DEVICE_VIEWS[id(ds)] = view
+        weakref.finalize(ds, _DEVICE_VIEWS.pop, id(ds), None)
+    return view
+
+
+def _cf_batch_from(train_pos: jax.Array, num_users: int, step, batch_size: int,
+                   history_len: int, seed: int) -> Batch:
+    """The one (seed, step)-pure batch derivation, shared by the host and
+    device entry points.  ``step`` may be a traced int32 (in-scan use); the
+    mix is threefry ``fold_in`` — explicit and stable, no CPython hash."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    ku, kc = jax.random.split(key)
+    users = jax.random.randint(ku, (batch_size,), 0, num_users, jnp.int32)
+    cols = jax.random.randint(kc, (batch_size,), 0, train_pos.shape[1],
+                              jnp.int32)
+    pos = train_pos[users, cols]
     # replace -1 (padded) with a resample from column 0
-    pos = np.where(pos >= 0, pos, ds.train_pos[users, 0])
-    pos = np.where(pos >= 0, pos, 0).astype(np.int32)
+    pos = jnp.where(pos >= 0, pos, train_pos[users, 0])
+    pos = jnp.where(pos >= 0, pos, 0).astype(jnp.int32)
     hist_ids = hist_mask = None
     if history_len > 0:
-        h = ds.train_pos[users, :history_len]
-        hist_mask = (h >= 0).astype(np.float32)
-        hist_ids = np.where(h >= 0, h, 0).astype(np.int32)
-        hist_ids = jnp.asarray(hist_ids)
-        hist_mask = jnp.asarray(hist_mask)
-    return Batch(user_ids=jnp.asarray(users), pos_ids=jnp.asarray(pos),
+        h = train_pos[users, :history_len]
+        hist_mask = (h >= 0).astype(jnp.float32)
+        hist_ids = jnp.where(h >= 0, h, 0).astype(jnp.int32)
+    return Batch(user_ids=users, pos_ids=pos,
                  hist_ids=hist_ids, hist_mask=hist_mask)
+
+
+def cf_batch(ds: CFDataset, step: int, batch_size: int, history_len: int = 0,
+             seed: int = 0) -> Batch:
+    """Pure function of (seed, step): sample users + one train positive each.
+
+    Host-side entry point (numpy dataset in, eager evaluation) — bit-identical
+    to :func:`cf_batch_device` on the same (seed, step) by construction.  The
+    device view of ``train_pos`` is memoized, so per-step calls don't
+    re-upload the table."""
+    return _cf_batch_from(device_cf_dataset(ds).train_pos, ds.num_users,
+                          step, batch_size, history_len, seed)
+
+
+def cf_batch_device(ds: DeviceCFDataset, seed: int, step, batch_size: int,
+                    history_len: int = 0) -> Batch:
+    """Jit/scan-traceable batch sampling over the device-resident dataset:
+    ``step`` may be a traced scalar (the ``lax.scan`` index inside an
+    ``EpochExecutor`` dispatch window), so steady-state training runs no host
+    numpy and copies nothing to the device per step."""
+    return _cf_batch_from(ds.train_pos, ds.num_users, step, batch_size,
+                          history_len, seed)
 
 
 def procedural_cf_batch(step: int, batch_size: int, num_users: int,
@@ -119,7 +197,8 @@ def lm_batch(step: int, batch_size: int, seq_len: int, vocab: int,
     """Synthetic LM batch — pure function of (seed, step).
 
     Markov-ish structure (token t+1 correlated with t) so the loss has
-    learnable signal for the end-to-end examples.
+    learnable signal for the end-to-end examples.  ``step`` may be a traced
+    scalar: the LM executor samples batches inside its scanned windows too.
     """
     key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
     k1, k2 = jax.random.split(key)
@@ -131,6 +210,8 @@ def lm_batch(step: int, batch_size: int, seq_len: int, vocab: int,
     batch = {"tokens": tokens}
     if extras:
         for name, (shape, dtype) in extras.items():
-            kk = jax.random.fold_in(k2, hash(name) % (2 ** 31))
+            # crc32, not hash(): str hashes are salted per process, so a
+            # restarted job would resume on different extras.
+            kk = jax.random.fold_in(k2, zlib.crc32(name.encode()) & 0x7FFFFFFF)
             batch[name] = (jax.random.normal(kk, shape, dtype) * 0.1)
     return batch

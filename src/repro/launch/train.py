@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--optimizer", default="adamw",
                     choices=["sgd", "adamw", "adafactor"])
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--steps-per-dispatch", type=int, default=16,
+                    help="K>1 scans K training steps per XLA dispatch "
+                         "(device-resident EpochExecutor; losses sync at "
+                         "window edges). 1 = per-step dispatch loop.")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at-step", type=int, default=None)
@@ -69,12 +73,14 @@ def main():
             if overrides:
                 cfg = dataclasses.replace(cfg, **overrides)
             engine = resolve_engine(cfg)
-            print(f"[launch] MF engine: {engine.name}")
+            print(f"[launch] MF engine: {engine.name} "
+                  f"(steps_per_dispatch={args.steps_per_dispatch})")
             ds = pipeline.synth_cf_dataset(min(cfg.num_users, 4096),
                                            cfg.num_items)
             state, losses = trainer.train_mf(
                 cfg, ds, steps=args.steps, batch_size=args.batch,
                 engine=engine,
+                steps_per_dispatch=args.steps_per_dispatch,
                 ckpt_dir=args.ckpt_dir, fail_at_step=args.fail_at_step)
         else:
             from repro.configs import get_config
@@ -100,7 +106,8 @@ def main():
                 steps=args.steps, lr=args.lr, batch_size=args.batch,
                 seq_len=args.seq, optimizer=args.optimizer,
                 grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
-                ckpt_every=args.ckpt_every, fail_at_step=args.fail_at_step)
+                ckpt_every=args.ckpt_every, fail_at_step=args.fail_at_step,
+                steps_per_dispatch=args.steps_per_dispatch)
             extras = None
             if cfg.family == "audio":
                 extras = {"frames": ((args.batch, cfg.encoder_seq, cfg.d_model),

@@ -16,12 +16,12 @@ Fault-tolerance model (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import mf, samplers
 from repro.core.engine import StepEngine, resolve_engine
@@ -51,6 +51,7 @@ class TrainerConfig:
     max_restarts: int = 2
     grad_accum: int = 1
     fixed_batch: bool = False               # overfit one batch (tests/demos)
+    steps_per_dispatch: int = 1             # >1: scanned EpochExecutor windows
 
 
 class LMTrainState(NamedTuple):
@@ -60,9 +61,13 @@ class LMTrainState(NamedTuple):
     step: jax.Array
 
 
-def make_lm_train_step(cfg: ArchConfig, opts: lm.TrainOptions, optimizer: Optimizer,
-                       lr: float, grad_accum: int = 1) -> Callable:
-    """Returns jitted (state, batch, rng) -> (state, loss).
+def make_lm_train_step_raw(cfg: ArchConfig, opts: lm.TrainOptions,
+                           optimizer: Optimizer, lr: float,
+                           grad_accum: int = 1) -> Callable:
+    """Traceable (state, batch, rng) -> (state, loss) — the un-jitted LM step,
+    consumable both standalone (``make_lm_train_step`` jits it) and as the
+    body of an ``EpochExecutor`` dispatch window (scanned, so it must not
+    carry its own jit boundary).
 
     grad_accum > 1 runs a microbatch scan, accumulating gradients — the
     deferred-synchronization discipline of paper §4.5 applied to the dense
@@ -102,7 +107,80 @@ def make_lm_train_step(cfg: ArchConfig, opts: lm.TrainOptions, optimizer: Optimi
                                                state.params, lr)
         return LMTrainState(new_params, new_opt, tile, state.step + 1), loss
 
-    return jax.jit(step_fn, donate_argnums=(0,))
+    return step_fn
+
+
+def make_lm_train_step(cfg: ArchConfig, opts: lm.TrainOptions, optimizer: Optimizer,
+                       lr: float, grad_accum: int = 1) -> Callable:
+    """Jitted (state, batch, rng) -> (state, loss) with donated state."""
+    return jax.jit(make_lm_train_step_raw(cfg, opts, optimizer, lr, grad_accum),
+                   donate_argnums=(0,))
+
+
+# ----------------------------------------------------------------------------
+# Device-resident epoch executor: K-step scanned dispatch windows
+# ----------------------------------------------------------------------------
+
+class EpochExecutor:
+    """Runs the steady-state training loop as ``lax.scan`` over K-step
+    dispatch windows with donated carry (the §3.1 fix applied to the *loop*:
+    one Python->XLA dispatch, zero host->device batch copies, and one
+    blocking sync per window instead of per step).
+
+    ``body(state, step) -> (state, loss)`` must be traceable with a traced
+    step index — it derives both the batch and the per-step rng from
+    ``step``, so a window is a pure function of ``(state, start)`` and the
+    (seed, step) restart contract is unchanged.  Windows may be truncated
+    (end of run, checkpoint boundary, injected failure), so checkpointing
+    and resume always land on window edges; each distinct length compiles
+    once and is cached.
+    """
+
+    def __init__(self, body: Callable, steps_per_dispatch: int):
+        self.body = body
+        self.steps_per_dispatch = max(int(steps_per_dispatch), 1)
+        self._windows: dict[int, Callable] = {}
+
+    def _compiled(self, length: int) -> Callable:
+        fn = self._windows.get(length)
+        if fn is None:
+            def run_window(state, start):
+                steps = start + jnp.arange(length, dtype=jnp.int32)
+                return jax.lax.scan(self.body, state, steps)
+            fn = jax.jit(run_window, donate_argnums=(0,))
+            self._windows[length] = fn
+        return fn
+
+    def run(self, state, start: int, length: int):
+        """Dispatch one [start, start+length) window; returns
+        (new_state, (length,) device loss array) — the only sync the driver
+        does is reading that array back at the window edge."""
+        return self._compiled(length)(state, jnp.asarray(start, jnp.int32))
+
+
+def _window_length(step: int, stop: int, k: int, ckpt_every: int,
+                   fail_at_step: Optional[int]) -> int:
+    """Next dispatch-window length: at most ``k`` steps, truncated so window
+    edges land exactly on the run end, the checkpoint schedule, and any armed
+    failure injection (the failure then fires *between* windows, where state
+    is well-defined and restorable)."""
+    length = min(k, stop - step)
+    if ckpt_every:
+        length = min(length, ckpt_every - step % ckpt_every)
+    if fail_at_step is not None and step < fail_at_step:
+        length = min(length, fail_at_step - step)
+    return length
+
+
+def _run_window(executor: EpochExecutor, state, step: int, stop: int,
+                ckpt_every: int, fail_at_step: Optional[int]):
+    """One truncated dispatch window + its edge sync — the single definition
+    of the window contract both drivers (train_lm / train_mf) run on.
+    Returns (new_state, host loss array, length)."""
+    length = _window_length(step, stop, executor.steps_per_dispatch,
+                            ckpt_every, fail_at_step)
+    state, window = executor.run(state, step, length)
+    return state, np.asarray(window), length
 
 
 def init_lm_state(rng: jax.Array, cfg: ArchConfig, opts: lm.TrainOptions,
@@ -119,9 +197,15 @@ def init_lm_state(rng: jax.Array, cfg: ArchConfig, opts: lm.TrainOptions,
 def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
              extras_spec: Optional[dict] = None,
              log: Callable[[str], None] = print) -> tuple[LMTrainState, list]:
-    """End-to-end LM training driver with restart-on-failure."""
+    """End-to-end LM training driver with restart-on-failure.
+
+    ``tcfg.steps_per_dispatch > 1`` runs the steady state through the
+    :class:`EpochExecutor` (batches sampled in-scan, one dispatch + one loss
+    sync per window).  Either way the driver never blocks on a per-step
+    ``float(loss)``: losses stay on device and are read back at window /
+    ``log_every`` boundaries only.
+    """
     optimizer = get_optimizer(tcfg.optimizer)
-    step_fn = make_lm_train_step(cfg, opts, optimizer, tcfg.lr, tcfg.grad_accum)
     rng = jax.random.PRNGKey(tcfg.seed)
     state = init_lm_state(rng, cfg, opts, optimizer)
     start = 0
@@ -130,22 +214,49 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
         state, start, _ = ckpt.restore(tcfg.ckpt_dir, state)
         log(f"[trainer] resumed from step {start}")
 
+    k = max(1, tcfg.steps_per_dispatch)
+    raw_step = make_lm_train_step_raw(cfg, opts, optimizer, tcfg.lr,
+                                      tcfg.grad_accum)
+    if k > 1:
+        def body(state, step):
+            b_step = jnp.zeros_like(step) if tcfg.fixed_batch else step
+            batch = pipeline.lm_batch(b_step, tcfg.batch_size, tcfg.seq_len,
+                                      cfg.vocab, tcfg.seed, extras_spec)
+            return raw_step(state, batch, jax.random.fold_in(rng, step))
+        executor = EpochExecutor(body, k)
+    else:
+        step_fn = jax.jit(raw_step, donate_argnums=(0,))
+
     restarts = 0
-    losses = []
+    losses: list = []
     step = start
     while step < tcfg.steps:
         try:
-            batch = pipeline.lm_batch(0 if tcfg.fixed_batch else step,
-                                      tcfg.batch_size, tcfg.seq_len,
-                                      cfg.vocab, tcfg.seed, extras_spec)
             if tcfg.fail_at_step is not None and step == tcfg.fail_at_step \
                     and restarts == 0:
                 raise SimulatedFailure(f"injected failure at step {step}")
-            state, loss = step_fn(state, batch, jax.random.fold_in(rng, step))
-            losses.append(float(loss))
-            if tcfg.log_every and step % tcfg.log_every == 0:
-                log(f"[trainer] step {step} loss {float(loss):.4f}")
-            step += 1
+            if k > 1:
+                state, window, length = _run_window(
+                    executor, state, step, tcfg.steps,
+                    tcfg.ckpt_every if tcfg.ckpt_dir else 0,
+                    tcfg.fail_at_step if restarts == 0 else None)
+                losses.extend(window.tolist())
+                if tcfg.log_every:
+                    for i in range(step, step + length):
+                        if i % tcfg.log_every == 0:
+                            log(f"[trainer] step {i} loss "
+                                f"{window[i - step]:.4f}")
+                step += length
+            else:
+                batch = pipeline.lm_batch(0 if tcfg.fixed_batch else step,
+                                          tcfg.batch_size, tcfg.seq_len,
+                                          cfg.vocab, tcfg.seed, extras_spec)
+                state, loss = step_fn(state, batch,
+                                      jax.random.fold_in(rng, step))
+                losses.append(loss)                # device scalar — no sync
+                if tcfg.log_every and step % tcfg.log_every == 0:
+                    log(f"[trainer] step {step} loss {float(loss):.4f}")
+                step += 1
             if tcfg.ckpt_dir and step % tcfg.ckpt_every == 0:
                 ckpt.save(tcfg.ckpt_dir, step, state)
         except SimulatedFailure as e:
@@ -158,6 +269,9 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
             else:
                 state = init_lm_state(rng, cfg, opts, optimizer)
                 step = 0
+    if losses and not isinstance(losses[0], float):
+        # per-step path: one bulk readback instead of a float() per step
+        losses = np.asarray(jnp.stack(losses)).tolist()
     return state, losses
 
 
@@ -171,20 +285,43 @@ def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
              item_weights=None,
              ckpt_dir: Optional[str] = None,
              ckpt_every: int = 200, fail_at_step: Optional[int] = None,
+             steps_per_dispatch: int = 1,
              log: Callable[[str], None] = print):
     """HEAT CF training (Fig. 3 loop) with the same fault-tolerance contract.
 
     ``engine`` picks the execution backend (core/engine.py); by default it is
     resolved from ``cfg.backend`` / ``cfg.update_impl`` / ``cfg.sampler``.
-    ``item_weights`` (optional (I,)) feeds the ``popularity`` sampler.
+    ``item_weights`` (optional (I,)) feeds the ``popularity`` sampler; when
+    omitted and the resolved sampler is ``popularity``, the dataset's own
+    interaction counts (``DeviceCFDataset.item_weights``) are used.
+
+    ``steps_per_dispatch=K`` (> 1) runs the steady state device-resident: the
+    dataset is uploaded once (``pipeline.device_cf_dataset``), batches are
+    sampled in-scan (``pipeline.cf_batch_device``), and the
+    :class:`EpochExecutor` dispatches K steps at a time, syncing losses only
+    at window edges.  Batches are bit-identical to the per-step loop's, so
+    both paths (and any K) produce the same trajectory, and checkpoints /
+    injected failures land on window edges with the same (seed, step)
+    restart guarantee.
     """
     if engine is None:
         engine = resolve_engine(cfg)
+    if item_weights is None and engine.sampler_name == "popularity":
+        item_weights = pipeline.device_cf_dataset(ds).item_weights
     rng = jax.random.PRNGKey(seed)
     state = mf.init_mf(rng, cfg)
-    step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, engine=engine,
-                              item_weights=item_weights),
-                      donate_argnums=(0,))
+    k = max(1, steps_per_dispatch)
+    if k > 1:
+        dds = pipeline.device_cf_dataset(ds)
+        body = mf.make_scan_body(
+            cfg, lambda step: pipeline.cf_batch_device(
+                dds, seed, step, batch_size, cfg.history_len),
+            seed, engine=engine, item_weights=item_weights)
+        executor = EpochExecutor(body, k)
+    else:
+        step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, engine=engine,
+                                  item_weights=item_weights),
+                          donate_argnums=(0,))
     start = 0
     if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
         state, start, _ = ckpt.restore(ckpt_dir, state)
@@ -196,10 +333,18 @@ def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
         try:
             if fail_at_step is not None and step == fail_at_step and restarts == 0:
                 raise SimulatedFailure(f"injected failure at step {step}")
-            batch = pipeline.cf_batch(ds, step, batch_size, cfg.history_len, seed)
-            state, loss = step_fn(state, batch, jax.random.fold_in(rng, step))
-            losses.append(float(loss))
-            step += 1
+            if k > 1:
+                state, window, length = _run_window(
+                    executor, state, step, steps, ckpt_every if ckpt_dir else 0,
+                    fail_at_step if restarts == 0 else None)
+                losses.extend(window.tolist())              # window-edge sync
+                step += length
+            else:
+                batch = pipeline.cf_batch(ds, step, batch_size,
+                                          cfg.history_len, seed)
+                state, loss = step_fn(state, batch, jax.random.fold_in(rng, step))
+                losses.append(float(loss))
+                step += 1
             if ckpt_dir and step % ckpt_every == 0:
                 ckpt.save(ckpt_dir, step, state)
         except SimulatedFailure as e:
@@ -207,5 +352,9 @@ def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
             if restarts > 2 or not ckpt_dir:
                 raise
             log(f"[mf] {e} -> restoring")
-            state, step, _ = ckpt.restore(ckpt_dir, state)
+            if ckpt.latest_step(ckpt_dir) is not None:
+                state, step, _ = ckpt.restore(ckpt_dir, state)
+            else:           # failed before the first checkpoint: start over
+                state = mf.init_mf(rng, cfg)
+                step = 0
     return state, losses

@@ -127,6 +127,137 @@ def test_mf_failure_resume(tmp_path):
                                np.asarray(s2.params.user_table), atol=1e-6)
 
 
+# ----------------------------------------------------------------------------
+# Device-resident epoch executor (scanned dispatch windows)
+# ----------------------------------------------------------------------------
+
+def _assert_states_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_mf_executor_matches_per_step_loop():
+    """The tentpole invariant: scanning K steps per dispatch (device-resident
+    batches, in-scan rng) reproduces the per-step loop bit-for-bit."""
+    ds = pipeline.synth_cf_dataset(50, 80, interactions_per_user=10)
+    cfg = MFConfig(num_users=50, num_items=80, emb_dim=8, num_negatives=4,
+                   lr=0.05, tile_size=16, refresh_interval=5)
+    s1, l1 = trainer.train_mf(cfg, ds, steps=20, batch_size=16,
+                              log=lambda *_: None)
+    s2, l2 = trainer.train_mf(cfg, ds, steps=20, batch_size=16,
+                              steps_per_dispatch=16, log=lambda *_: None)
+    _assert_states_equal(s1, s2)
+    np.testing.assert_array_equal(np.float32(l1), np.float32(l2))
+
+
+@pytest.mark.parametrize("backend", ["fused", "autodiff", "pallas"])
+@pytest.mark.parametrize("sampler", ["tile", "popularity"])
+def test_mf_scan_carry_parity(backend, sampler):
+    """Every backend x sampler combination is scan-carry-compatible: the
+    tile state and popularity weights thread through lax.scan windows with
+    the exact per-step trajectory (pallas runs in interpret mode on CPU)."""
+    ds = pipeline.synth_cf_dataset(40, 60, interactions_per_user=8)
+    cfg = MFConfig(num_users=40, num_items=60, emb_dim=8, num_negatives=4,
+                   lr=0.05, backend=backend, sampler=sampler,
+                   tile_size=16 if sampler == "tile" else 0,
+                   refresh_interval=3)
+    weights = (pipeline.device_cf_dataset(ds).item_weights
+               if sampler == "popularity" else None)
+    s1, _ = trainer.train_mf(cfg, ds, steps=6, batch_size=8,
+                             item_weights=weights, log=lambda *_: None)
+    s2, _ = trainer.train_mf(cfg, ds, steps=6, batch_size=8,
+                             item_weights=weights, steps_per_dispatch=3,
+                             log=lambda *_: None)
+    _assert_states_equal(s1, s2)
+
+
+def test_mf_executor_resume_bit_exact_mid_window_failure(tmp_path):
+    """Acceptance (ISSUE 4): a failure injected mid-window truncates the
+    window at the failure step, restores from the window-edge checkpoint and
+    finishes on the exact state of the uninterrupted executor run — and of
+    the per-step loop."""
+    ds = pipeline.synth_cf_dataset(50, 80, interactions_per_user=10)
+    cfg = MFConfig(num_users=50, num_items=80, emb_dim=8, num_negatives=4,
+                   lr=0.05)
+    clean, _ = trainer.train_mf(cfg, ds, steps=24, batch_size=16,
+                                steps_per_dispatch=16,
+                                ckpt_dir=str(tmp_path / "a"), ckpt_every=8,
+                                log=lambda *_: None)
+    crashed, _ = trainer.train_mf(cfg, ds, steps=24, batch_size=16,
+                                  steps_per_dispatch=16,
+                                  ckpt_dir=str(tmp_path / "b"), ckpt_every=8,
+                                  fail_at_step=11,      # inside [8, 24) window
+                                  log=lambda *_: None)
+    per_step, _ = trainer.train_mf(cfg, ds, steps=24, batch_size=16,
+                                   log=lambda *_: None)
+    _assert_states_equal(clean, crashed)
+    _assert_states_equal(clean, per_step)
+    assert int(clean.step) == int(crashed.step) == 24
+
+
+def test_mf_failure_before_first_checkpoint_restarts(tmp_path):
+    """A failure injected before any checkpoint exists restarts from scratch
+    (same contract as train_lm) instead of crashing on restore."""
+    ds = pipeline.synth_cf_dataset(40, 60, interactions_per_user=8)
+    cfg = MFConfig(num_users=40, num_items=60, emb_dim=8, num_negatives=4,
+                   lr=0.05)
+    clean, _ = trainer.train_mf(cfg, ds, steps=12, batch_size=8,
+                                steps_per_dispatch=8,
+                                ckpt_dir=str(tmp_path / "a"), ckpt_every=8,
+                                log=lambda *_: None)
+    crashed, _ = trainer.train_mf(cfg, ds, steps=12, batch_size=8,
+                                  steps_per_dispatch=8,
+                                  ckpt_dir=str(tmp_path / "b"), ckpt_every=8,
+                                  fail_at_step=5,   # before the first ckpt
+                                  log=lambda *_: None)
+    _assert_states_equal(clean, crashed)
+
+
+def test_lm_executor_matches_per_step_loop():
+    cfg = _small_cfg()
+    t1 = _tcfg(steps=8)
+    t2 = _tcfg(steps=8, steps_per_dispatch=4)
+    s1, l1 = trainer.train_lm(cfg, OPTS, t1, log=lambda *_: None)
+    s2, l2 = trainer.train_lm(cfg, OPTS, t2, log=lambda *_: None)
+    _assert_states_equal(s1.params, s2.params)
+    assert int(s1.step) == int(s2.step) == 8
+    np.testing.assert_array_equal(np.float32(l1), np.float32(l2))
+
+
+def test_lm_executor_heat_tile_scan_carry():
+    """The LM vocab tile (id-only TileState in LMTrainState) is a scan carry
+    too: the HEAT-head executor reproduces the per-step heat run."""
+    cfg = _small_cfg()
+    cfg = dataclasses.replace(
+        cfg, heat=dataclasses.replace(cfg.heat, num_negatives=8, tile_size=32,
+                                      refresh_interval=4))
+    opts = dataclasses.replace(OPTS, loss="heat")
+    s1, _ = trainer.train_lm(cfg, opts, _tcfg(steps=8), log=lambda *_: None)
+    s2, _ = trainer.train_lm(cfg, opts, _tcfg(steps=8, steps_per_dispatch=4),
+                             log=lambda *_: None)
+    _assert_states_equal(s1.params, s2.params)
+    np.testing.assert_array_equal(np.asarray(s1.tile.tile_ids),
+                                  np.asarray(s2.tile.tile_ids))
+
+
+def test_lm_executor_failure_resume_bit_exact(tmp_path):
+    """The LM driver's window-edge failure/restore contract matches the
+    per-step driver's (same checkpoints, same final state)."""
+    cfg = _small_cfg()
+    clean, _ = trainer.train_lm(
+        cfg, OPTS, _tcfg(steps_per_dispatch=8,
+                         ckpt_dir=str(tmp_path / "clean")),
+        log=lambda *_: None)
+    crashed, _ = trainer.train_lm(
+        cfg, OPTS, _tcfg(steps_per_dispatch=8, fail_at_step=7,
+                         ckpt_dir=str(tmp_path / "crash")),
+        log=lambda *_: None)
+    _assert_states_equal(clean.params, crashed.params)
+    assert int(clean.step) == int(crashed.step) == 12
+
+
 def test_data_pipeline_restart_purity():
     """Batches are pure functions of (seed, step)."""
     b1 = pipeline.lm_batch(17, 4, 16, 100, seed=3)
