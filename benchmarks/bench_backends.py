@@ -179,6 +179,16 @@ def run():
         json.dump(payload, f, indent=2)
     emit("backends/json", 0.0, f"wrote {JSON_PATH} ({len(records)} rows)")
 
+    # A registered backend with zero rows means part of the matrix silently
+    # vanished from the artifact (e.g. an early `continue` around a broken
+    # combo).  Fail the suite rather than ship a partial file — the gate is
+    # benchmarks.check's, applied to the JSON just written so this suite and
+    # CI can never disagree on the invariant.
+    from benchmarks.check import backends_problems
+    problems = backends_problems(JSON_PATH)
+    if problems:
+        raise RuntimeError("; ".join(problems))
+
 
 if __name__ == "__main__":
     run()

@@ -16,11 +16,51 @@ efficiency derived from (a).  Real-mesh scaling is exercised by the dry-run
 (collective terms in EXPERIMENTS.md §Roofline).
 """
 import functools
+import json
+import os
+import subprocess
+import sys
 
 import jax
 
 from benchmarks.common import bench_cfg, emit, rand_batch, time_fn
 from repro.core import mf
+
+
+def run_sharded():
+    """shard/ suite: real multi-device steps/sec at 1, 2, 4, 8 *forced host*
+    devices (one subprocess per count — the device split must precede the
+    first jax import, which this process already did).
+
+    ``shard_efficiency`` = steps/sec at S devices / steps/sec at 1.  The S
+    forced devices share one CPU's silicon, so 1.0 means sharding (collective
+    + partitioned-dispatch overhead) is free at this scale; on a real
+    multi-chip mesh the same row reads as weak-scaling efficiency.
+    """
+    sps = {}
+    for devices in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={devices}"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in ("src", env.get("PYTHONPATH", "")) if p)
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.shard_probe",
+             "--devices", str(devices)],
+            capture_output=True, text=True, env=env, timeout=600)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"shard_probe failed at {devices} devices: "
+                f"{out.stderr[-2000:]}")
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        sps[devices] = rec["steps_per_sec"]
+        emit(f"shard/devices={devices}", rec["us_per_step"],
+             f"steps_per_sec={rec['steps_per_sec']:.1f}")
+    emit("shard/shard_efficiency", 0.0,
+         f"shard_efficiency={sps[8] / sps[1]:.2f} "
+         "(8-dev vs 1-dev steps/sec on forced host devices; "
+         "1.0 = sharding overhead-free, shared silicon)")
 
 
 def run():
@@ -38,6 +78,7 @@ def run():
     eff = times[1] / (times[8] / 8)
     emit("fig12/weak_scaling_efficiency", 0.0,
          f"{100 * eff:.1f}% (paper: 83.7% on 64 threads)")
+    run_sharded()
 
 
 if __name__ == "__main__":

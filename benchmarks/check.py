@@ -1,0 +1,89 @@
+"""The benchmark gate — one definition, run by CI *and* locally:
+
+    PYTHONPATH=src python -m benchmarks.check
+
+Validates the JSON artifacts ``benchmarks.run`` / ``benchmarks.bench_backends``
+write (paths overridable via ``BENCH_RUN_JSON`` / ``BENCH_BACKENDS_JSON``):
+
+  * every suite in BENCH_run.json finished ``ok``;
+  * no ``loop/`` row carries a REGRESSION flag (the dispatch-window executor's
+    ``scan_speedup >= 1.0`` contract);
+  * the scaling suite, when present, actually emitted its ``shard/`` rows
+    (multi-device steps/sec at 1..8 forced host devices);
+  * BENCH_backends.json has at least one ``mf``-layout and one ``head``-layout
+    row for every *registered* loss backend — a partial file (a backend
+    silently skipped) fails instead of shipping.
+
+Exits non-zero on any problem.  CI calls this module instead of an inline
+heredoc so the gate that blocks a PR is exactly the gate you can run at home.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RUN_JSON = os.environ.get("BENCH_RUN_JSON", "BENCH_run.json")
+BACKENDS_JSON = os.environ.get("BENCH_BACKENDS_JSON", "BENCH_backends.json")
+
+
+def run_problems(path: str = RUN_JSON) -> list[str]:
+    """Gate on the per-suite results of ``benchmarks.run``."""
+    if not os.path.exists(path):
+        return [f"{path} was never written — did benchmarks.run fail before "
+                "its JSON dump? (see that step's own output)"]
+    with open(path) as f:
+        run = json.load(f)
+    problems = [f"suite {name!r} not ok: {s['error']}"
+                for name, s in run["suites"].items() if s["status"] != "ok"]
+    flagged = [r["name"] for s in run["suites"].values() for r in s["rows"]
+               if r.get("name", "").startswith("loop/")
+               and "REGRESSION" in r.get("derived", "")]
+    if flagged:
+        problems.append(f"loop rows flagged REGRESSION: {flagged}")
+    scaling = run["suites"].get("scaling(fig12)")
+    if scaling is not None and scaling["status"] == "ok":
+        shard_rows = [r for r in scaling["rows"]
+                      if r.get("name", "").startswith("shard/devices=")]
+        if not shard_rows:
+            problems.append(
+                "scaling suite ran but emitted no shard/devices= rows "
+                "(multi-device throughput went unmeasured)")
+    return problems
+
+
+def backends_problems(path: str = BACKENDS_JSON) -> list[str]:
+    """Gate on the engine-matrix artifact: no registered backend may ship
+    with zero rows (that is how a broken backend used to disappear from the
+    uploaded file without failing anything)."""
+    if not os.path.exists(path):
+        return [f"{path} was never written — bench_backends did not run"]
+    with open(path) as f:
+        payload = json.load(f)
+    rows = payload.get("rows", [])
+    from repro.core.engine import available_backends
+    problems = []
+    for backend in available_backends()["backend"]:
+        for layout in ("mf", "head"):
+            n = sum(1 for r in rows
+                    if r.get("backend") == backend and r.get("layout") == layout)
+            if n == 0:
+                problems.append(
+                    f"registered backend {backend!r} has zero "
+                    f"layout={layout!r} rows in {path} (partial artifact)")
+    return problems
+
+
+def main() -> int:
+    problems = run_problems() + backends_problems()
+    for p in problems:
+        print(f"bench-gate: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print("bench-gate: all suites ok, loop/ rows regression-free, shard/ "
+          "rows present, backends matrix complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -65,6 +65,20 @@ def main() -> None:
                                          "rows": [{"ok": ok, "skip": skip,
                                                    "fail": fail}]}
 
+    # The engine-matrix artifact must cover every registered backend — a
+    # partial BENCH_backends.json (zero rows for some backend) fails the run
+    # instead of shipping silently.  bench_backends itself raises on this;
+    # validating the written JSON here keeps the guarantee even if that
+    # suite's internals change.
+    from benchmarks import check
+    backends_bad = check.backends_problems()
+    if backends_bad:
+        for p in backends_bad:
+            print(f"bench_backends artifact: {p}", file=sys.stderr)
+        failures.append("backends(artifact)")
+        results["backends(artifact)"] = {
+            "status": "fail", "error": "; ".join(backends_bad), "rows": []}
+
     json_path = os.environ.get("BENCH_RUN_JSON", "BENCH_run.json")
     with open(json_path, "w") as f:
         json.dump({"suites": results, "failures": failures}, f, indent=2)

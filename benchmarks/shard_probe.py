@@ -1,0 +1,81 @@
+"""Steps/sec of the sharded EpochExecutor at a forced host device count.
+
+Run as a *subprocess* (one per device count) by ``bench_scaling``:
+``--xla_force_host_platform_device_count`` only takes effect before the first
+jax import, and the parent benchmark process already holds a 1-device
+platform.  Prints a single JSON line on stdout.
+
+Forced host devices split one CPU, so the probe measures sharding *overhead*
+(collectives + partitioned dispatch on shared silicon), not parallel
+speedup — the honest CI-able number; real-mesh speedups are a ROADMAP item.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--steps-per-dispatch", type=int, default=8)
+    ap.add_argument("--windows", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.core import mf
+    from repro.core import mf_distributed as mfd
+    from repro.core.engine import resolve_engine
+    from repro.data import pipeline
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_data_mesh
+    from repro.train import trainer
+
+    assert jax.device_count() >= args.devices, (
+        f"need {args.devices} devices, have {jax.device_count()} — the "
+        "parent must set XLA_FLAGS=--xla_force_host_platform_device_count")
+
+    cfg = mf.MFConfig(num_users=2000, num_items=4000, emb_dim=64,
+                      num_negatives=16, lr=0.05)
+    ds = pipeline.synth_cf_dataset(cfg.num_users, cfg.num_items,
+                                   interactions_per_user=16)
+    engine = resolve_engine(cfg)
+    mesh = make_data_mesh(args.devices) if args.devices > 1 else None
+    plan = mfd.make_sharding_plan(cfg, mesh) if mesh is not None else None
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    if plan is not None:
+        state = plan.place_state(state)
+    dds = pipeline.device_cf_dataset(ds)
+
+    def batch_fn(step):
+        b = pipeline.cf_batch_device(dds, 0, step, args.batch)
+        return plan.constrain_batch(b) if plan is not None else b
+
+    body = mf.make_scan_body(cfg, batch_fn, 0, engine=engine)
+    executor = trainer.EpochExecutor(
+        body, args.steps_per_dispatch,
+        state_shardings=plan.state_shardings if plan else None,
+        scalar_sharding=plan.scalar_sharding if plan else None)
+
+    k = args.steps_per_dispatch
+    with (shd.use_mesh(mesh) if mesh is not None
+          else contextlib.nullcontext()):
+        state, losses = executor.run(state, 0, k)      # compile + warm
+        jax.block_until_ready(losses)
+        t0 = time.perf_counter()
+        for w in range(1, args.windows + 1):
+            state, losses = executor.run(state, w * k, k)
+        jax.block_until_ready(losses)
+        dt = time.perf_counter() - t0
+
+    print(json.dumps({"devices": args.devices,
+                      "steps_per_sec": args.windows * k / dt,
+                      "us_per_step": dt / (args.windows * k) * 1e6}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""HEAT reproduction package.
+
+One process-global configuration lives here: **sharding-invariant RNG**.
+jax's legacy (non-partitionable) threefry lowering gives no value guarantee
+under SPMD partitioning — the same ``jax.random`` call can return *different
+numbers* depending on how the partitioner decides to shard its output (we hit
+exactly this: negative draws silently changed when the item table moved onto
+a ``model`` axis).  The partitionable lowering is counter-based per element,
+so every draw is a pure function of (key, position) no matter the mesh — the
+property the whole (seed, step) restart/parity contract of the data pipeline
+and the sharded executor is built on.  It must be set before any key is
+consumed, hence at package import; newer jax releases default to it.
+"""
+import jax as _jax
+
+_jax.config.update("jax_threefry_partitionable", True)

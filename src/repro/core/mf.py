@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.core import aggregation as agg
 from repro.core import samplers
 from repro.core.engine import SampleContext, StepEngine, resolve_engine
+from repro.distributed import sharding as shd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +155,25 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
         user_e, pos_e, neg_e, hist_e, params.aggregator)
     g_user, g_pos, g_neg = grads[0], grads[1], grads[2]
 
+    # Sharded execution (mf_distributed): forward/backward above is data-
+    # parallel over batch rows; everything below is scatter/segment updates
+    # whose operands (tables, tile, accumulator) are row-sharded or
+    # replicated.  Exchange the touched-row gradients and their ids ONCE here
+    # (one all-gather each under a mesh, a no-op without one): each shard
+    # then applies the full update list to its own rows as a local,
+    # update-order-preserving scatter — no partial-update replicas, and the
+    # sharded carry tracks the single-device step to rounding.  The
+    # step-shared/tile-sourced negative layouts are exactly the cheap case:
+    # slot-reduction below shrinks their exchange from (B, n, K) to (N1, K).
+    ids_user, ids_pos = map(shd.replicated, (batch.user_ids, batch.pos_ids))
+    g_user, g_pos, g_neg = map(shd.replicated, (g_user, g_pos, g_neg))
+    neg_ids = shd.replicated(neg_ids)
+    neg_local = None if neg_local is None else shd.replicated(neg_local)
+    ids_hist = g_hist = None
+    if params.aggregator is not None:
+        ids_hist = shd.replicated(batch.hist_ids)
+        g_hist = shd.replicated(grads[3])
+
     # §3.1/§4.3: only touched rows are written.  All of the step's item
     # gradient groups go to row_update_many in ONE call: one XLA scatter for
     # scatter_add, one cross-group pre-reduce + single gather-FMA kernel
@@ -168,10 +188,9 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     # *larger* than the sample (big N1, small batch) the reduction would
     # inflate the table write from B*n to N1 rows, so the per-sample scatter
     # path stays (shapes are static — the branch resolves at trace time).
-    new_user = engine.row_update(params.user_table, batch.user_ids, g_user,
-                                 cfg.lr)
+    new_user = engine.row_update(params.user_table, ids_user, g_user, cfg.lr)
     neg_reduced = None
-    item_groups = [(batch.pos_ids, g_pos)]
+    item_groups = [(ids_pos, g_pos)]
     if neg_local is not None and tile.tile_ids.shape[0] <= neg_local.size:
         neg_reduced = samplers.reduce_local_grads(neg_local, g_neg,
                                                   tile.tile_ids.shape[0])
@@ -179,7 +198,7 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     else:
         item_groups.append((neg_ids, g_neg))
     if params.aggregator is not None:
-        item_groups.append((batch.hist_ids, grads[3]))
+        item_groups.append((ids_hist, g_hist))
     new_item = engine.row_update_many(params.item_table, item_groups, cfg.lr)
 
     # Tile coherence: write the same updates through to the replicated copy
@@ -188,7 +207,7 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     # history, uniform-sourced negatives — concatenated into ONE
     # sorted-intersection pass), then refresh on schedule (§4.2).
     if tile is not None:
-        global_groups = [(batch.pos_ids, g_pos)]
+        global_groups = [(ids_pos, g_pos)]
         if neg_reduced is not None:
             tile = samplers.tile_apply_reduced(tile, neg_reduced, cfg.lr)
         elif neg_local is not None:
@@ -196,7 +215,7 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
         else:
             global_groups.append((neg_ids, g_neg))
         if params.aggregator is not None:
-            global_groups.append((batch.hist_ids, grads[3]))
+            global_groups.append((ids_hist, g_hist))
         tile = samplers.tile_apply_global_grads_many(tile, global_groups, cfg.lr)
         tile = samplers.tile_refresh(tile, r_tile, new_item, cfg.refresh_interval)
 

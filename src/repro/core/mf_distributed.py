@@ -4,10 +4,14 @@
      rating matrix partitioning and efficient communication"  (HEAT, §7)
 
 Partitioning (DESIGN.md §5, rating-matrix reading):
-  - **user table** (U, K): row-sharded over the data axes — each data shard
-    owns a contiguous user range, and every batch row is drawn from the
-    owning shard's range (the rating-matrix row partition).  User lookups and
-    updates are therefore shard-local: zero collectives.
+  - **user table** (U, K): row-sharded over the data axes (the rating-matrix
+    row partition).  With range-aligned per-shard sampling
+    (:func:`partitioned_batch`, the multi-host plan) lookups and updates are
+    fully shard-local; the executable single-process path samples users
+    uniformly instead (to stay bit-identical with the single-device
+    trajectory), so its per-step user-table cost is one gather across the
+    data axes plus the (B, K) touched-row grad exchange
+    (``shd.replicated`` in ``mf.heat_train_step``).
   - **item table** (I, K): row-sharded over `model` (items are shared by all
     users — the rating-matrix column dimension).  Positive lookups cross the
     model axis (one (B, K) combine per step); negative lookups go through the
@@ -58,13 +62,18 @@ MF_SHAPES = {
 }
 
 
+def _has_attn_q(cfg: mf.MFConfig) -> bool:
+    return cfg.aggregation_kind in ("self_attn", "user_attn")
+
+
 def state_specs(cfg: mf.MFConfig, mesh: Mesh) -> mf.MFState:
     """PartitionSpec tree mirroring MFState (fit to the mesh)."""
     ms = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp = ("pod", "data")
     user = fit_spec((cfg.num_users, cfg.emb_dim), P(dp, None), ms)
     item = fit_spec((cfg.num_items, cfg.emb_dim), P("model", None), ms)
-    agg = (AggregatorParams(w=P(), attn_q=None) if cfg.history_len > 0 else None)
+    agg = (AggregatorParams(w=P(), attn_q=P() if _has_attn_q(cfg) else None)
+           if cfg.history_len > 0 else None)
     tile = (samplers.TileState(tile_ids=P(), tile_emb=P(), step=P())
             if cfg.tile_size > 0 else None)
     accum = (AccumulatorState(grad_sum=agg, count=P())
@@ -77,14 +86,15 @@ def abstract_state(cfg: mf.MFConfig, dtype=jnp.float32) -> mf.MFState:
     """ShapeDtypeStruct stand-ins (no allocation) for the dry-run."""
     k = cfg.emb_dim
     sds = jax.ShapeDtypeStruct
-    agg = (AggregatorParams(w=sds((k, k), dtype), attn_q=None)
+    attn_q = sds((k, k), dtype) if _has_attn_q(cfg) else None
+    agg = (AggregatorParams(w=sds((k, k), dtype), attn_q=attn_q)
            if cfg.history_len > 0 else None)
     tile = (samplers.TileState(tile_ids=sds((cfg.tile_size,), jnp.int32),
                                tile_emb=sds((cfg.tile_size, k), dtype),
                                step=sds((), jnp.int32))
             if cfg.tile_size > 0 else None)
     accum = (AccumulatorState(
-        grad_sum=AggregatorParams(w=sds((k, k), dtype), attn_q=None),
+        grad_sum=AggregatorParams(w=sds((k, k), dtype), attn_q=attn_q),
         count=sds((), jnp.int32)) if cfg.history_len > 0 else None)
     return mf.MFState(
         params=mf.MFParams(sds((cfg.num_users, k), dtype),
@@ -122,6 +132,63 @@ def partitioned_batch(ds_sampler, step: int, global_batch: int,
     users = np.concatenate([
         r.integers(s * rows, (s + 1) * rows, per) for s in range(num_shards)])
     return users.astype(np.int32)
+
+
+# ----------------------------------------------------------------------------
+# Executable sharded training (not just lowering): the plan object the
+# trainer's EpochExecutor runs on real multi-device meshes.
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MFShardingPlan:
+    """Concrete placement for one sharded MF training run.
+
+    ``state_shardings`` mirrors :class:`mf.MFState` (user table row-sharded
+    over the data axes, item table row-sharded over ``model``, tile/aggregator
+    replicated); ``batch_sharding``/``scalar_sharding`` place the per-step
+    batch rows over the data axes and scalars replicated.  Built once per run
+    by :func:`make_sharding_plan` and handed to ``trainer.train_mf`` /
+    ``EpochExecutor`` — the executor jits its dispatch windows with these as
+    in/out_shardings, so the scanned carry stays sharded *and donated* across
+    windows (no per-window resharding or host round-trip).
+    """
+
+    mesh: Mesh
+    state_shardings: mf.MFState          # pytree of NamedSharding
+    batch_axes: tuple                    # mesh axes sharding batch rows
+    scalar_sharding: NamedSharding       # replicated (losses, rng, step index)
+
+    def place_state(self, state: mf.MFState) -> mf.MFState:
+        """Shard an (initial or restored) state onto the mesh."""
+        return jax.device_put(state, self.state_shardings)
+
+    def constrain_batch(self, batch: mf.Batch) -> mf.Batch:
+        """Pin sampled batch rows to the data axes inside a jitted program.
+
+        The batch is *derived* in-program (threefry of (seed, step), identical
+        on every device — partitionable RNG makes the values sharding-
+        invariant), so no data ever moves: the constraint just tells GSPMD to
+        keep per-shard slices local, making user-table lookups shard-local
+        row-partition accesses (the rating-matrix row partition).
+        """
+        if not self.batch_axes:
+            return batch
+
+        def pin(x):
+            spec = P(self.batch_axes, *(None,) * (x.ndim - 1))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        return jax.tree.map(pin, batch)
+
+
+def make_sharding_plan(cfg: mf.MFConfig, mesh: Mesh) -> MFShardingPlan:
+    """state_specs fit to the mesh, as device_put/jit-consumable shardings."""
+    from repro.distributed import sharding as shd
+    return MFShardingPlan(
+        mesh=mesh,
+        state_shardings=shd.tree_shardings(mesh, state_specs(cfg, mesh)),
+        batch_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+        scalar_sharding=NamedSharding(mesh, P()))
 
 
 def build_mf_cell(cfg: mf.MFConfig, mesh: Mesh, global_batch: int,

@@ -172,6 +172,47 @@ def cf_batch_device(ds: DeviceCFDataset, seed: int, step, batch_size: int,
                           history_len, seed)
 
 
+def shard_bounds(global_batch: int, num_shards: int) -> list[tuple[int, int]]:
+    """Contiguous [start, stop) row ranges partitioning a global batch.
+
+    Remainder rows (``global_batch % num_shards``) go one-per-shard to the
+    lowest shard indices, so sizes differ by at most one and the concatenation
+    of all shards is exactly the global batch — no row dropped or duplicated
+    at any (batch, num_shards), which is what lets uneven batches shard.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    base, rem = divmod(global_batch, num_shards)
+    bounds, start = [], 0
+    for s in range(num_shards):
+        stop = start + base + (1 if s < rem else 0)
+        bounds.append((start, stop))
+        start = stop
+    return bounds
+
+
+def cf_batch_shard(ds: DeviceCFDataset, seed: int, step, global_batch: int,
+                   shard: int, num_shards: int,
+                   history_len: int = 0) -> Batch:
+    """Shard ``shard``'s rows of the *global* (seed, step) batch.
+
+    The derivation is the same threefry draw as :func:`cf_batch` /
+    :func:`cf_batch_device` — every shard evaluates the full (cheap, id-only)
+    derivation and slices its contiguous row range, so concatenating the
+    shards reproduces the single-device batch **bit-exactly** (asserted by a
+    hypothesis test over uneven ``batch % num_shards`` remainders).  This is
+    the per-host entry point for multi-host data loading; within one process
+    the GSPMD path instead samples the full batch in-program and pins it to
+    the data axes (``MFShardingPlan.constrain_batch``) — same values, zero
+    host work.  Partitionable threefry (enabled at package import) is what
+    makes the values independent of where they are computed.
+    """
+    start, stop = shard_bounds(global_batch, num_shards)[shard]
+    full = _cf_batch_from(ds.train_pos, ds.num_users, step, global_batch,
+                          history_len, seed)
+    return jax.tree.map(lambda x: x[start:stop], full)
+
+
 def procedural_cf_batch(step: int, batch_size: int, num_users: int,
                         num_items: int, num_clusters: int = 64,
                         seed: int = 0) -> Batch:

@@ -93,10 +93,43 @@ def constrain(x: jax.Array, spec: P) -> jax.Array:
         x, NamedSharding(_MESH, resolve(spec)))
 
 
+def replicated(x: jax.Array) -> jax.Array:
+    """Pin ``x`` fully replicated under the active mesh (no-op without one).
+
+    The explicit cross-device exchange point: a data-sharded value constrained
+    replicated lowers to one all-gather.  Scatter/segment update paths use it
+    on their (ids, grads) inputs — GSPMD's cost model may otherwise leave
+    scatter *updates* sharded on an axis the operand does not have, which
+    applies each replica's partial update set and silently drops the rest
+    (observed on jax 0.4.37 with a data-sharded batch updating a
+    model-sharded table).  Replicated updates make every such op a local,
+    update-order-preserving scatter over the operand's own shard, keeping
+    the sharded table trajectory aligned with the single-device one to
+    float rounding."""
+    if _MESH is None or _MESH.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P()))
+
+
 def named(spec: P) -> Optional[NamedSharding]:
     if _MESH is None:
         return None
     return NamedSharding(_MESH, resolve(spec))
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree against ``mesh`` (the
+    form ``jax.jit``'s in/out_shardings and ``jax.device_put`` consume)."""
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The installed mesh when it can actually shard (>1 device), else None —
+    the guard executable sharded paths use to fall back to single-device."""
+    if _MESH is None or _MESH.empty or _MESH.size <= 1:
+        return None
+    return _MESH
 
 
 def data_shards() -> int:

@@ -33,3 +33,15 @@ def make_host_mesh(data: int = 1, model: int = 1):
     ndev = data * model
     devices = jax.devices()[:ndev]
     return jax.make_mesh((data, model), ("data", "model"), devices=devices)
+
+
+def make_data_mesh(data: int = 0):
+    """Pure data-parallel mesh; ``data=0`` takes every visible device.
+
+    The forced-host-device recipe (laptops / CI) pairs this with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before the
+    first jax import, which splits one CPU into N devices — real collectives
+    and sharded buffers, shared silicon (correctness, not speedup).
+    """
+    n = data or len(jax.devices())
+    return make_host_mesh(data=n, model=1)

@@ -37,7 +37,13 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at-step", type=int, default=None)
-    ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "data", "production"],
+                    help="host: --mesh-data x --mesh-model devices; data: "
+                         "pure data-parallel over every visible device "
+                         "(e.g. XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 on a laptop/CI box); production: the TPU "
+                         "pod topology")
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--backend", default=None,
@@ -54,9 +60,11 @@ def main():
     args = ap.parse_args()
 
     from repro.distributed import sharding as shd
-    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.launch.mesh import (make_data_mesh, make_host_mesh,
+                                   make_production_mesh)
 
     mesh = (make_production_mesh() if args.mesh == "production"
+            else make_data_mesh() if args.mesh == "data"
             else make_host_mesh(args.mesh_data, args.mesh_model))
 
     with shd.use_mesh(mesh if mesh.size > 1 else None):
@@ -74,7 +82,8 @@ def main():
                 cfg = dataclasses.replace(cfg, **overrides)
             engine = resolve_engine(cfg)
             print(f"[launch] MF engine: {engine.name} "
-                  f"(steps_per_dispatch={args.steps_per_dispatch})")
+                  f"(steps_per_dispatch={args.steps_per_dispatch}, "
+                  f"devices={mesh.size if mesh.size > 1 else 1})")
             ds = pipeline.synth_cf_dataset(min(cfg.num_users, 4096),
                                            cfg.num_items)
             state, losses = trainer.train_mf(

@@ -15,6 +15,7 @@ Fault-tolerance model (DESIGN.md §5):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
@@ -24,8 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mf, samplers
+from repro.core import mf_distributed as mfd
 from repro.core.engine import StepEngine, resolve_engine
 from repro.data import pipeline
+from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.models.config import ArchConfig
 from repro.optim.optimizers import Optimizer, get_optimizer
@@ -52,6 +55,7 @@ class TrainerConfig:
     grad_accum: int = 1
     fixed_batch: bool = False               # overfit one batch (tests/demos)
     steps_per_dispatch: int = 1             # >1: scanned EpochExecutor windows
+    mesh: Optional[Any] = None              # device mesh; None = active mesh
 
 
 class LMTrainState(NamedTuple):
@@ -134,11 +138,21 @@ class EpochExecutor:
     (end of run, checkpoint boundary, injected failure), so checkpointing
     and resume always land on window edges; each distinct length compiles
     once and is cached.
+
+    ``state_shardings`` (a pytree of NamedShardings mirroring the carry,
+    e.g. ``MFShardingPlan.state_shardings``) turns the executor multi-device:
+    windows are jitted with the carry pinned to those shardings on the way in
+    *and* out, so the sharded state is donated window-to-window with zero
+    resharding, and the per-window loss array lands replicated
+    (``scalar_sharding``) for the edge sync.
     """
 
-    def __init__(self, body: Callable, steps_per_dispatch: int):
+    def __init__(self, body: Callable, steps_per_dispatch: int, *,
+                 state_shardings=None, scalar_sharding=None):
         self.body = body
         self.steps_per_dispatch = max(int(steps_per_dispatch), 1)
+        self.state_shardings = state_shardings
+        self.scalar_sharding = scalar_sharding
         self._windows: dict[int, Callable] = {}
 
     def _compiled(self, length: int) -> Callable:
@@ -147,7 +161,13 @@ class EpochExecutor:
             def run_window(state, start):
                 steps = start + jnp.arange(length, dtype=jnp.int32)
                 return jax.lax.scan(self.body, state, steps)
-            fn = jax.jit(run_window, donate_argnums=(0,))
+            kw = {}
+            if self.state_shardings is not None:
+                kw = dict(
+                    in_shardings=(self.state_shardings, self.scalar_sharding),
+                    out_shardings=(self.state_shardings,
+                                   self.scalar_sharding))
+            fn = jax.jit(run_window, donate_argnums=(0,), **kw)
             self._windows[length] = fn
         return fn
 
@@ -204,7 +224,25 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
     sync per window).  Either way the driver never blocks on a per-step
     ``float(loss)``: losses stay on device and are read back at window /
     ``log_every`` boundaries only.
+
+    ``tcfg.mesh`` installs a device mesh for the run (models' logical-axis
+    constraints resolve against it and batches are pinned to the data axes);
+    with no explicit mesh, an already-active ``shd`` mesh is honored the same
+    way — the launcher's ``--mesh`` path.
     """
+    if tcfg.mesh is not None and shd.get_mesh() is not tcfg.mesh:
+        with shd.use_mesh(tcfg.mesh):
+            return train_lm(cfg, opts, dataclasses.replace(tcfg, mesh=None),
+                            extras_spec, log)
+    data_mesh = shd.active_mesh()
+
+    def shard_batch(batch):
+        """Pin batch rows to the data axes (no-op without a usable mesh)."""
+        if data_mesh is None:
+            return batch
+        return {k: shd.constrain(v, shd.batch_spec(*(None,) * (v.ndim - 1)))
+                for k, v in batch.items()}
+
     optimizer = get_optimizer(tcfg.optimizer)
     rng = jax.random.PRNGKey(tcfg.seed)
     state = init_lm_state(rng, cfg, opts, optimizer)
@@ -222,10 +260,12 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
             b_step = jnp.zeros_like(step) if tcfg.fixed_batch else step
             batch = pipeline.lm_batch(b_step, tcfg.batch_size, tcfg.seq_len,
                                       cfg.vocab, tcfg.seed, extras_spec)
-            return raw_step(state, batch, jax.random.fold_in(rng, step))
+            return raw_step(state, shard_batch(batch),
+                            jax.random.fold_in(rng, step))
         executor = EpochExecutor(body, k)
     else:
-        step_fn = jax.jit(raw_step, donate_argnums=(0,))
+        step_fn = jax.jit(lambda s, b, r: raw_step(s, shard_batch(b), r),
+                          donate_argnums=(0,))
 
     restarts = 0
     losses: list = []
@@ -286,6 +326,7 @@ def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
              ckpt_dir: Optional[str] = None,
              ckpt_every: int = 200, fail_at_step: Optional[int] = None,
              steps_per_dispatch: int = 1,
+             mesh=None,
              log: Callable[[str], None] = print):
     """HEAT CF training (Fig. 3 loop) with the same fault-tolerance contract.
 
@@ -303,58 +344,100 @@ def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
     both paths (and any K) produce the same trajectory, and checkpoints /
     injected failures land on window edges with the same (seed, step)
     restart guarantee.
+
+    ``mesh`` (default: the active ``shd`` mesh when it has more than one
+    device) runs the same loop *sharded*: the state is placed per
+    ``mf_distributed.make_sharding_plan`` (user rows over the data axes, item
+    rows over ``model``), batches sampled in-scan are pinned to the data axes,
+    and the executor's windows carry the sharded state donated end to end.
+    Sampling is sharding-invariant (partitionable threefry), so the sharded
+    trajectory tracks the single-device one exactly up to cross-device
+    float-reduction order (tests/test_multidevice.py quantifies it).
     """
     if engine is None:
         engine = resolve_engine(cfg)
     if item_weights is None and engine.sampler_name == "popularity":
         item_weights = pipeline.device_cf_dataset(ds).item_weights
+    mesh = mesh if mesh is not None else shd.active_mesh()
+    plan = mfd.make_sharding_plan(cfg, mesh) if mesh is not None else None
+    state_shardings = plan.state_shardings if plan is not None else None
     rng = jax.random.PRNGKey(seed)
-    state = mf.init_mf(rng, cfg)
+
+    def init_state():
+        s = mf.init_mf(rng, cfg)
+        return plan.place_state(s) if plan is not None else s
+
+    state = init_state()
     k = max(1, steps_per_dispatch)
     if k > 1:
         dds = pipeline.device_cf_dataset(ds)
-        body = mf.make_scan_body(
-            cfg, lambda step: pipeline.cf_batch_device(
-                dds, seed, step, batch_size, cfg.history_len),
-            seed, engine=engine, item_weights=item_weights)
-        executor = EpochExecutor(body, k)
+
+        def batch_fn(step):
+            b = pipeline.cf_batch_device(dds, seed, step, batch_size,
+                                         cfg.history_len)
+            return plan.constrain_batch(b) if plan is not None else b
+
+        body = mf.make_scan_body(cfg, batch_fn, seed, engine=engine,
+                                 item_weights=item_weights)
+        executor = EpochExecutor(
+            body, k, state_shardings=state_shardings,
+            scalar_sharding=plan.scalar_sharding if plan else None)
     else:
-        step_fn = jax.jit(partial(mf.heat_train_step, cfg=cfg, engine=engine,
-                                  item_weights=item_weights),
-                          donate_argnums=(0,))
+        raw_step = partial(mf.heat_train_step, cfg=cfg, engine=engine,
+                           item_weights=item_weights)
+        if plan is not None:
+            def sharded_step(state, batch, rng):
+                return raw_step(state, plan.constrain_batch(batch), rng)
+            step_fn = jax.jit(
+                sharded_step,
+                in_shardings=(state_shardings, None, None),
+                out_shardings=(state_shardings, plan.scalar_sharding),
+                donate_argnums=(0,))
+        else:
+            step_fn = jax.jit(raw_step, donate_argnums=(0,))
     start = 0
     if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
-        state, start, _ = ckpt.restore(ckpt_dir, state)
+        state, start, _ = ckpt.restore(ckpt_dir, state,
+                                       shardings=state_shardings)
         log(f"[mf] resumed from step {start}")
 
     losses = []
     step, restarts = start, 0
-    while step < steps:
-        try:
-            if fail_at_step is not None and step == fail_at_step and restarts == 0:
-                raise SimulatedFailure(f"injected failure at step {step}")
-            if k > 1:
-                state, window, length = _run_window(
-                    executor, state, step, steps, ckpt_every if ckpt_dir else 0,
-                    fail_at_step if restarts == 0 else None)
-                losses.extend(window.tolist())              # window-edge sync
-                step += length
-            else:
-                batch = pipeline.cf_batch(ds, step, batch_size,
-                                          cfg.history_len, seed)
-                state, loss = step_fn(state, batch, jax.random.fold_in(rng, step))
-                losses.append(float(loss))
-                step += 1
-            if ckpt_dir and step % ckpt_every == 0:
-                ckpt.save(ckpt_dir, step, state)
-        except SimulatedFailure as e:
-            restarts += 1
-            if restarts > 2 or not ckpt_dir:
-                raise
-            log(f"[mf] {e} -> restoring")
-            if ckpt.latest_step(ckpt_dir) is not None:
-                state, step, _ = ckpt.restore(ckpt_dir, state)
-            else:           # failed before the first checkpoint: start over
-                state = mf.init_mf(rng, cfg)
-                step = 0
+    # Windows trace lazily on first dispatch; the mesh must be installed then
+    # so the step's sharding constraints (shd.constrain / shd.replicated)
+    # resolve against it.
+    run_ctx = (shd.use_mesh(mesh) if plan is not None
+               else contextlib.nullcontext())
+    with run_ctx:
+        while step < steps:
+            try:
+                if fail_at_step is not None and step == fail_at_step \
+                        and restarts == 0:
+                    raise SimulatedFailure(f"injected failure at step {step}")
+                if k > 1:
+                    state, window, length = _run_window(
+                        executor, state, step, steps,
+                        ckpt_every if ckpt_dir else 0,
+                        fail_at_step if restarts == 0 else None)
+                    losses.extend(window.tolist())          # window-edge sync
+                    step += length
+                else:
+                    batch = pipeline.cf_batch(ds, step, batch_size,
+                                              cfg.history_len, seed)
+                    state, loss = step_fn(state, batch,
+                                          jax.random.fold_in(rng, step))
+                    losses.append(float(loss))
+                    step += 1
+                if ckpt_dir and step % ckpt_every == 0:
+                    ckpt.save(ckpt_dir, step, state)
+            except SimulatedFailure as e:
+                restarts += 1
+                if restarts > 2 or not ckpt_dir:
+                    raise
+                log(f"[mf] {e} -> restoring")
+                if ckpt.latest_step(ckpt_dir) is not None:
+                    state, step, _ = ckpt.restore(ckpt_dir, state,
+                                                  shardings=state_shardings)
+                else:       # failed before the first checkpoint: start over
+                    state, step = init_state(), 0
     return state, losses

@@ -4,6 +4,8 @@ device-resident dataset view consumed by the EpochExecutor."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.data import pipeline
 
@@ -77,6 +79,32 @@ def test_device_dataset_weights_are_interaction_counts():
     expect = np.bincount(valid.ravel(), minlength=ds.num_items)
     np.testing.assert_array_equal(np.asarray(dds.item_weights), expect)
     assert dds.item_weights.shape == (ds.num_items,)
+
+
+_SHARD_DS = _ds()
+_SHARD_DDS = pipeline.device_cf_dataset(_SHARD_DS)
+
+
+@settings(max_examples=25, deadline=None)
+@given(batch=st.integers(1, 48), shards=st.integers(1, 9),
+       seed=st.integers(0, 3), step=st.integers(0, 1000))
+def test_cf_batch_shard_partitions_exactly(batch, shards, seed, step):
+    """Per-shard sampling is an exact partition of the host batch at the same
+    (seed, step): concatenating the shards reproduces cf_batch bit-for-bit
+    (no dropped or duplicated rows), shard sizes differ by at most one, and
+    uneven ``batch % shards`` remainders are spread over the low shards."""
+    host = pipeline.cf_batch(_SHARD_DS, step, batch, 2, seed)
+    parts = [pipeline.cf_batch_shard(_SHARD_DDS, seed, step, batch, s, shards,
+                                     history_len=2)
+             for s in range(shards)]
+    sizes = [int(p.user_ids.shape[0]) for p in parts]
+    assert sum(sizes) == batch
+    assert max(sizes) - min(sizes) <= 1
+    assert sorted(sizes, reverse=True) == sizes      # remainder on low shards
+    cat = jax.tree.map(lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+                       *parts)
+    for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(cat)):
+        np.testing.assert_array_equal(np.asarray(a), b)
 
 
 def test_lm_batch_extras_stable_mix():
