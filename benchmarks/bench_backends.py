@@ -52,10 +52,22 @@ def _time_engine(cfg, engine, batch_size=_BATCH, iters=5):
     return time_fn(lambda: step(state, batch, rng), iters=iters, warmup=2)
 
 
+def _row_mode(backend: str, update_impl: str, interpret: bool) -> str:
+    """Execution-mode label for a matrix row: ``interpret`` when any pallas
+    leg of the combo runs under the Pallas interpreter (CPU), ``compiled``
+    for pallas on a real kernel backend, ``native`` for pure-jnp engines.
+    Interpret rows measure the interpreter, not the kernel — check.py
+    excludes them from speedup claims, so the label must be machine-read."""
+    if "pallas" in (backend, update_impl):
+        return "interpret" if interpret else "compiled"
+    return "native"
+
+
 def run():
     adv = available_backends()
     cfg = _bench_cfg()
     records = []
+    interpret = ops_default_interpret()
 
     ref_us = None
     for backend in adv["backend"]:
@@ -66,9 +78,13 @@ def run():
                 ref_us = us
             derived = (f"vs_fused+scatter_add={us / ref_us:.2f}x"
                        if ref_us else "")
+            mode = _row_mode(backend, update, interpret)
+            if mode == "interpret" and derived:
+                derived += " [interpret]"
             emit(f"backends/{engine.name}", us, derived)
             records.append({"backend": backend, "update_impl": update,
                             "sampler": engine.sampler_name, "layout": "mf",
+                            "mode": mode,
                             "us_per_call": us, "derived": derived})
 
     # LM-head layout (step-shared (n, K) negatives): the same loss registry
@@ -91,9 +107,12 @@ def run():
         if backend == "fused":
             head_ref_us = us
         derived = f"vs_fused={us / head_ref_us:.2f}x" if head_ref_us else ""
+        mode = _row_mode(backend, "-", interpret)
+        if mode == "interpret" and derived:
+            derived += " [interpret]"
         emit(f"backends/head/{backend}", us, derived)
         records.append({"backend": backend, "update_impl": "-",
-                        "sampler": "-", "layout": "head",
+                        "sampler": "-", "layout": "head", "mode": mode,
                         "us_per_call": us, "derived": derived})
 
     # Sampler contrast (§4.2 + Chen et al. 2017): same engine, different
@@ -105,7 +124,10 @@ def run():
         emit(f"backends/sampler={src}", us)
         records.append({"backend": engine.backend,
                         "update_impl": engine.update_impl, "sampler": src,
-                        "layout": "mf", "us_per_call": us, "derived": ""})
+                        "layout": "mf",
+                        "mode": _row_mode(engine.backend, engine.update_impl,
+                                          interpret),
+                        "us_per_call": us, "derived": ""})
 
     # Kernel launches per step (§3.1/§4.5 single-launch contract): the counter
     # increments once per gather-FMA pallas_call bound during tracing, so

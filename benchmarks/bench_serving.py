@@ -1,0 +1,177 @@
+"""Serving bench suite (`serve/` rows): p50/p99 latency, QPS, and pruned-vs-
+exact recall@k for the top-k recommendation path at production catalog scale.
+
+Two claims are gated (benchmarks/check.py fails CI on either flag):
+
+  * **batching pays** — one (B=32, ·) device call must deliver >= 2x the QPS
+    of 32 single-request calls (`serve/exact/batching` row; REGRESSION flag
+    when the ratio drops below BATCHING_GATE);
+  * **pruning keeps recall** — `retrieval.topk_pruned` at the default
+    expansion budget must keep recall@K >= RECALL_GATE against the exact
+    `mf.topk_all_items` answer, and expanding *all* tiles must be exact up
+    to float tie-swaps (recall >= PARITY_GATE) — the parity contract
+    (`serve/pruned/...` rows; RECALL_FLOOR / PARITY flag otherwise).
+
+Catalog: 10^5 items by default (BENCH_SERVING_ITEMS env var scales to 10^6
+for the paper-scale run) with planted cluster structure — trained CF
+embeddings cluster by co-interaction (that is why §4.2's tiling works at all,
+and why a coarse quantizer prunes well); random isotropic embeddings would
+understate pruner recall and overstate nothing else.
+
+Rows land in BENCH_run.json via the suite runner AND in a standalone
+BENCH_serving.json artifact (override path with BENCH_SERVING_JSON).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import mf, retrieval
+
+JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+NUM_ITEMS = int(os.environ.get("BENCH_SERVING_ITEMS", 100_000))
+NUM_USERS = 4096
+EMB_DIM = 64
+TOPK = 10
+TILE_ROWS = 512
+DEFAULT_EXPAND = 8           # the default budget the recall gate applies to
+BATCH_SIZES = (1, 8, 32)
+RECALL_GATE = 0.95
+# Full expansion must be exact up to float tie-swaps: the pruned path's
+# einsum and the exact path's chunked matmul round differently, so items
+# whose float64 scores agree below float32 resolution (~1e-7) can swap
+# across the k boundary — on a catalog with planted near-duplicates that is
+# the only allowed disagreement.  Each swap costs 1/(32*TOPK) ≈ 0.0031
+# recall, so 0.99 tolerates a handful of ties while any real pruning bug
+# (a candidate dropped outright) lands far below it.
+# (tests/test_retrieval.py asserts recall == 1.0 exactly on tie-free data.)
+PARITY_GATE = 0.99
+BATCHING_GATE = 2.0
+
+
+def _clustered_params(num_users: int, num_items: int, dim: int,
+                      num_clusters: int = 64, noise: float = 0.35,
+                      seed: int = 0) -> mf.MFParams:
+    """CF-shaped embeddings: users and items drawn around shared cluster
+    centers (co-interaction structure), the regime trained MF tables live in."""
+    r = np.random.default_rng(seed)
+    centers = r.normal(size=(num_clusters, dim)).astype(np.float32)
+    ic = r.integers(0, num_clusters, num_items)
+    uc = r.integers(0, num_clusters, num_users)
+    items = centers[ic] + noise * r.normal(size=(num_items, dim)).astype(np.float32)
+    users = centers[uc] + noise * r.normal(size=(num_users, dim)).astype(np.float32)
+    return mf.MFParams(jnp.asarray(users), jnp.asarray(items), None)
+
+
+def _time_quantiles(fn, *, iters: int = 20, warmup: int = 3) -> dict:
+    """Per-call wall times -> {p50, p99, mean} in us.  p99 over a small
+    sample is the max — reported as the tail bound it is."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts = np.sort(ts) * 1e6
+    return {"p50": float(ts[len(ts) // 2]),
+            "p99": float(ts[min(int(np.ceil(len(ts) * 0.99)) - 1,
+                                len(ts) - 1)]),
+            "mean": float(ts.mean())}
+
+
+def _recall_vs(ids: np.ndarray, ref_ids: np.ndarray) -> float:
+    """Mean per-row overlap fraction |ids ∩ ref| / |ref| (set recall — the
+    exact path's own tie-break order is not part of the contract)."""
+    hits = [len(set(a.tolist()) & set(b.tolist())) / len(b)
+            for a, b in zip(np.asarray(ids), np.asarray(ref_ids))]
+    return float(np.mean(hits))
+
+
+def run():
+    params = _clustered_params(NUM_USERS, NUM_ITEMS, EMB_DIM)
+    index = retrieval.build_retrieval_index(params.item_table,
+                                            tile_rows=TILE_ROWS, seed=0)
+    rows = []
+
+    def record(name, us, derived, **extra):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": us, "derived": derived,
+                     **extra})
+
+    exact = jax.jit(lambda uids: mf.topk_all_items(
+        params, uids, TOPK, item_chunk=8192))
+
+    r = np.random.default_rng(1)
+    reqs = {b: jnp.asarray(r.integers(0, NUM_USERS, b), jnp.int32)
+            for b in BATCH_SIZES}
+
+    # -- exact path: latency/QPS across batch sizes -------------------------
+    qps = {}
+    for b in BATCH_SIZES:
+        q = _time_quantiles(lambda b=b: exact(reqs[b]))
+        qps[b] = b / (q["mean"] / 1e6)
+        record(f"serve/exact/B={b}", q["p50"],
+               f"p50_ms={q['p50'] / 1e3:.2f} p99_ms={q['p99'] / 1e3:.2f} "
+               f"qps={qps[b]:.0f}",
+               batch=b, path="exact", p50_us=q["p50"], p99_us=q["p99"],
+               qps=qps[b])
+
+    batching_speedup = qps[32] / qps[1]
+    flag = " REGRESSION" if batching_speedup < BATCHING_GATE else ""
+    record("serve/exact/batching", 0.0,
+           f"qps_B32_over_B1={batching_speedup:.2f}x gate>={BATCHING_GATE}x"
+           f"{flag}",
+           path="exact", batching_speedup=batching_speedup)
+
+    # -- pruned path: latency + recall across expansion budgets -------------
+    exact_ids = {b: np.asarray(exact(reqs[b])) for b in BATCH_SIZES}
+    budgets = sorted({2, 4, DEFAULT_EXPAND, 16, index.num_tiles})
+    for t in budgets:
+        pruned = jax.jit(lambda uids, t=t: retrieval.topk_pruned(
+            params, uids, TOPK, index, expand_tiles=t))
+        got = np.asarray(pruned(reqs[32]))
+        rec = _recall_vs(got, exact_ids[32])
+        full = t >= index.num_tiles
+        q = _time_quantiles(lambda: pruned(reqs[32]),
+                            iters=5 if full else 20)
+        speedup = (32 / (q["mean"] / 1e6)) / qps[32]
+        flag = ""
+        if full and rec < PARITY_GATE:
+            flag = " PARITY"                  # full expansion must be exact
+        elif t == DEFAULT_EXPAND and rec < RECALL_GATE:
+            flag = " RECALL_FLOOR"
+        record(f"serve/pruned/B=32/T={t}", q["p50"],
+               f"recall@{TOPK}={rec:.4f} p50_ms={q['p50'] / 1e3:.2f} "
+               f"p99_ms={q['p99'] / 1e3:.2f} "
+               f"speedup_vs_exact={speedup:.2f}x"
+               f"{' (full expansion)' if full else ''}{flag}",
+               batch=32, path="pruned", expand_tiles=t, recall=rec,
+               p50_us=q["p50"], p99_us=q["p99"],
+               default_budget=(t == DEFAULT_EXPAND))
+
+    payload = {
+        "config": {"num_items": NUM_ITEMS, "num_users": NUM_USERS,
+                   "emb_dim": EMB_DIM, "topk": TOPK,
+                   "tile_rows": TILE_ROWS, "num_tiles": index.num_tiles,
+                   "default_expand_tiles": DEFAULT_EXPAND,
+                   "recall_gate": RECALL_GATE,
+                   "parity_gate": PARITY_GATE,
+                   "batching_gate": BATCHING_GATE},
+        "jax_backend": jax.default_backend(),
+        "rows": rows,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("serve/json", 0.0, f"wrote {JSON_PATH} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    run()

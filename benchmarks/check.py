@@ -10,9 +10,19 @@ write (paths overridable via ``BENCH_RUN_JSON`` / ``BENCH_BACKENDS_JSON``):
     ``scan_speedup >= 1.0`` contract);
   * the scaling suite, when present, actually emitted its ``shard/`` rows
     (multi-device steps/sec at 1..8 forced host devices);
+  * the serving suite ran (``serve/`` rows present — a missing suite would
+    ship a PR with the serving path unmeasured) and none of its rows carry a
+    REGRESSION (batched QPS fell below the >= 2x gate), RECALL_FLOOR
+    (tile pruner under the recall gate at the default expansion budget), or
+    PARITY (full tile expansion no longer matches the exact top-k) flag;
   * BENCH_backends.json has at least one ``mf``-layout and one ``head``-layout
     row for every *registered* loss backend — a partial file (a backend
-    silently skipped) fails instead of shipping.
+    silently skipped) fails instead of shipping;
+  * every BENCH_backends.json matrix row carries an execution-``mode`` label
+    and pallas rows are labeled consistently with the file's
+    ``pallas_interpret`` flag — interpret rows time the Pallas interpreter,
+    not a kernel, so their ``vs_*`` ratios must be tagged ``[interpret]``
+    and are excluded from any speedup claim this gate checks.
 
 Exits non-zero on any problem.  CI calls this module instead of an inline
 heredoc so the gate that blocks a PR is exactly the gate you can run at home.
@@ -49,6 +59,22 @@ def run_problems(path: str = RUN_JSON) -> list[str]:
             problems.append(
                 "scaling suite ran but emitted no shard/devices= rows "
                 "(multi-device throughput went unmeasured)")
+    serving = run["suites"].get("serving(latency/qps)")
+    if serving is None:
+        problems.append(
+            "serving suite missing from BENCH_run.json — the serving path "
+            "shipped unmeasured (benchmarks.run must include "
+            "bench_serving.run)")
+    elif serving["status"] == "ok":
+        serve_rows = [r for r in serving["rows"]
+                      if r.get("name", "").startswith("serve/")]
+        if not serve_rows:
+            problems.append("serving suite ran but emitted no serve/ rows")
+        for flag in ("REGRESSION", "RECALL_FLOOR", "PARITY"):
+            hit = [r["name"] for r in serve_rows
+                   if flag in r.get("derived", "")]
+            if hit:
+                problems.append(f"serving rows flagged {flag}: {hit}")
     return problems
 
 
@@ -71,6 +97,33 @@ def backends_problems(path: str = BACKENDS_JSON) -> list[str]:
                 problems.append(
                     f"registered backend {backend!r} has zero "
                     f"layout={layout!r} rows in {path} (partial artifact)")
+
+    # Execution-mode labels: interpret-mode pallas rows time the Pallas
+    # interpreter, not a kernel — they must be labeled so nothing downstream
+    # mistakes their vs_* ratios for kernel speedup claims.
+    interpret = bool(payload.get("pallas_interpret", False))
+    for r in rows:
+        who = (f"row backend={r.get('backend')!r} "
+               f"update_impl={r.get('update_impl')!r} "
+               f"layout={r.get('layout')!r} sampler={r.get('sampler')!r}")
+        mode = r.get("mode")
+        if mode not in ("interpret", "compiled", "native"):
+            problems.append(f"{who} has no execution-mode label "
+                            f"(mode={mode!r})")
+            continue
+        is_pallas = "pallas" in (r.get("backend"), r.get("update_impl"))
+        want = ("interpret" if interpret else "compiled") if is_pallas \
+            else "native"
+        if mode != want:
+            problems.append(
+                f"{who} labeled mode={mode!r} but pallas_interpret="
+                f"{interpret} implies {want!r}")
+        if mode == "interpret" and "vs_" in r.get("derived", "") \
+                and "[interpret]" not in r["derived"]:
+            problems.append(
+                f"{who} carries an untagged speedup ratio "
+                f"({r['derived']!r}) in interpret mode — must be tagged "
+                "[interpret] and excluded from speedup claims")
     return problems
 
 
@@ -81,7 +134,8 @@ def main() -> int:
     if problems:
         return 1
     print("bench-gate: all suites ok, loop/ rows regression-free, shard/ "
-          "rows present, backends matrix complete")
+          "rows present, serve/ rows present and unflagged, backends matrix "
+          "complete and mode-labeled")
     return 0
 
 

@@ -20,7 +20,7 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_aggregation, bench_backends,
                             bench_breakdown, bench_epoch_time, bench_memory,
-                            bench_scaling, bench_tiling, common)
+                            bench_scaling, bench_serving, bench_tiling, common)
     print("name,us_per_call,derived")
     suites = [
         ("epoch_time(fig6/7)", bench_epoch_time.run),
@@ -32,6 +32,7 @@ def main() -> None:
         ("scaling(fig12)", bench_scaling.run),
         ("memory(tab3)", bench_memory.run),
         ("backends(engine-matrix)", bench_backends.run),
+        ("serving(latency/qps)", bench_serving.run),
     ]
     failures = []
     results = {}

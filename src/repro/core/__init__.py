@@ -11,6 +11,9 @@
 - heat_head:    the technique as a sampled-CCL output head for LMs (a thin
                 adapter over engine — no private loss or tile code)
 - metrics:      Recall@K / NDCG@K (Table 5)
+- retrieval:    tile-pruned batched top-k serving (§4.2 tiling as an ANN
+                coarse quantizer: centroid scoring -> tile expansion ->
+                exact scoring on a fixed-size candidate block)
 """
 from repro.core.losses import (
     CCLConfig,
@@ -40,6 +43,12 @@ from repro.core.mf import (
     heat_train_step,
     init_mf,
     topk_all_items,
+)
+from repro.core.retrieval import (
+    RetrievalIndex,
+    build_retrieval_index,
+    refresh_index,
+    topk_pruned,
 )
 from repro.core.samplers import (
     TileState,

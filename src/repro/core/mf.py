@@ -303,11 +303,13 @@ def topk_all_items(params: MFParams, user_ids: jax.Array, k: int, *,
     items at Table 3 scale would be a 38 GB score matrix for a 1k-user
     batch, and ~18k chunks must not unroll into the HLO).  ``exclude_mask``
     (B, I) bool masks training positives (sliced per chunk, so it is read
-    but never duplicated).
+    but never duplicated).  ``k > num_items`` is clamped: the result is
+    (B, min(k, I)) — every item ranked, no phantom ids.
     """
     u = params.user_table[user_ids]
     t = params.item_table
     num_items = t.shape[0]
+    k = min(int(k), num_items)
     c = item_chunk or num_items
     if c >= num_items:
         sc = _score_item_block(u, t, similarity)

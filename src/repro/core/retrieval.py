@@ -1,0 +1,200 @@
+"""Tile-pruned batched top-k retrieval: HEAT's cache tiling repurposed as an
+ANN candidate pruner for the serving path.
+
+The training-side insight of §4.2 — partition the item table into tiles and
+make most reads hit a small resident block — is a free *coarse quantizer* at
+inference time: score one centroid per tile first, expand only the top-T
+tiles, and run exact scoring on the surviving candidates.  `topk_all_items`
+touches all I rows per request; `topk_pruned` touches T·R of them (tiles x
+rows-per-tile), trading a bounded recall loss for an I/(T·R) reduction in
+score work and memory traffic — the paper's affordability pitch applied to
+serving: throughput from smarter memory access, not bigger hardware.
+
+Design constraints, in order:
+
+  * **jit-stable fixed-size candidate layout.**  Tiles all hold exactly
+    ``tile_rows`` member slots (the last tile is padded with -1), so the
+    candidate set for any request is a static ``(B, expand_tiles *
+    tile_rows)`` block — no data-dependent shapes, one compiled program per
+    (B, T) configuration, reusable across refreshes.
+  * **sharding compatibility.**  Query-time work is gathers + matmuls over
+    ``MFParams`` tables and the small index arrays — exactly the operations
+    ``MFShardingPlan`` already places (user rows over data axes, item rows
+    over ``model``), so the same ``topk_pruned`` program serves sharded
+    tables under a mesh with no retrieval-specific collectives
+    (tests/test_multidevice.py).
+  * **refresh without rebuild.**  The member partition is computed offline
+    (balanced spherical k-means + chunking); centroids are a pure function
+    of (partition, live table) via :func:`refresh_index` — a jittable
+    segment-mean over device-resident tables, so an online trainer's updated
+    ``MFState`` re-centers the index without a host round-trip or
+    re-clustering.
+
+Parity contract: with ``expand_tiles >= num_tiles`` the candidate set is the
+whole catalog and ``topk_pruned`` returns exactly ``mf.topk_all_items``'s
+top-k set (recall@k == 1.0); at reduced budgets the serving bench gates
+recall@k >= 0.95 (benchmarks/bench_serving.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mf
+
+
+class RetrievalIndex(NamedTuple):
+    """Coarse quantizer over the item catalog (all leaves are arrays, so the
+    index is a jit-friendly pytree and can live device-resident next to the
+    tables it prunes).
+
+    ``member_ids``: (num_tiles, tile_rows) int32 — a partition of the item
+    ids into fixed-size tiles, -1 in padding slots (only the last tile can
+    carry them).  ``centroids``: (num_tiles, K) — per-tile mean of the member
+    rows (L2-normalized member rows and re-normalized mean under cosine
+    similarity, raw mean under dot).
+    """
+
+    member_ids: jax.Array
+    centroids: jax.Array
+
+    @property
+    def num_tiles(self) -> int:
+        return self.member_ids.shape[0]
+
+    @property
+    def tile_rows(self) -> int:
+        return self.member_ids.shape[1]
+
+
+def _normalize(x: jax.Array, axis: int = -1) -> jax.Array:
+    return x / jnp.linalg.norm(x, axis=axis, keepdims=True).clip(1e-12)
+
+
+def refresh_index(index: RetrievalIndex, item_table: jax.Array, *,
+                  similarity: str = "cosine") -> RetrievalIndex:
+    """Recompute centroids from the *live* table under the existing member
+    partition — the online-serving refresh path.
+
+    Pure jnp over device arrays (one gather + masked mean), so a server
+    holding the trainer's device-resident ``MFState`` re-centers the index
+    in-place on the accelerator: no host round-trip, no re-clustering, and
+    the fixed member layout means every compiled ``topk_pruned`` program
+    stays valid.  Partition quality decays only as far as the embeddings
+    drift from the clustering; rebuild with :func:`build_retrieval_index`
+    on the slow path when recall degrades.
+    """
+    ids = index.member_ids
+    valid = (ids >= 0)
+    rows = item_table[jnp.maximum(ids, 0)]                    # (T, R, K)
+    if similarity == "cosine":
+        rows = _normalize(rows)
+    rows = rows * valid[..., None].astype(rows.dtype)
+    counts = jnp.maximum(valid.sum(axis=1), 1).astype(rows.dtype)
+    cent = rows.sum(axis=1) / counts[:, None]
+    if similarity == "cosine":
+        cent = _normalize(cent)
+    return index._replace(centroids=cent.astype(item_table.dtype))
+
+
+def build_retrieval_index(item_table, *, tile_rows: int = 512,
+                          similarity: str = "cosine", kmeans_iters: int = 8,
+                          seed: int = 0) -> RetrievalIndex:
+    """Cluster the catalog into fixed-size tiles and return the index.
+
+    Offline/host path (numpy): a few rounds of spherical k-means over the
+    item embeddings pick ``ceil(I / tile_rows)`` directions, then items are
+    sorted by (cluster, id) and *chunked* into exactly-``tile_rows``-sized
+    tiles — balanced by construction, so the candidate layout is fixed-size
+    (the ANN analogue of §4.2's equal-N1 tiles) at the cost of a chunk
+    occasionally straddling two clusters.  Centroids are then recomputed
+    from the actual chunk membership via :func:`refresh_index`, which is
+    also the online refresh path — build and refresh can never disagree
+    about what a centroid means.
+    """
+    table = np.asarray(item_table, np.float32)
+    num_items, _ = table.shape
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    num_tiles = max(1, math.ceil(num_items / tile_rows))
+
+    x = table
+    if similarity == "cosine":
+        x = table / np.maximum(np.linalg.norm(table, axis=1, keepdims=True),
+                               1e-12)
+    rng = np.random.default_rng(seed)
+    centroids = x[rng.choice(num_items, size=num_tiles, replace=False)]
+    assign = np.zeros(num_items, np.int64)
+    for _ in range(max(kmeans_iters, 0)):
+        assign = np.argmax(x @ centroids.T, axis=1)
+        sums = np.zeros_like(centroids)
+        np.add.at(sums, assign, x)
+        counts = np.bincount(assign, minlength=num_tiles).astype(np.float32)
+        live = counts > 0
+        centroids[live] = sums[live] / counts[live, None]
+        if similarity == "cosine":
+            centroids = centroids / np.maximum(
+                np.linalg.norm(centroids, axis=1, keepdims=True), 1e-12)
+
+    # Balanced partition: sort by (cluster, id), chunk into tile_rows rows.
+    order = np.lexsort((np.arange(num_items), assign)).astype(np.int32)
+    padded = np.full(num_tiles * tile_rows, -1, np.int32)
+    padded[:num_items] = order
+    member_ids = jnp.asarray(padded.reshape(num_tiles, tile_rows))
+    index = RetrievalIndex(member_ids=member_ids,
+                           centroids=jnp.zeros((num_tiles, table.shape[1]),
+                                               item_table.dtype))
+    return refresh_index(index, jnp.asarray(item_table),
+                         similarity=similarity)
+
+
+def topk_pruned(params: mf.MFParams, user_ids: jax.Array, k: int,
+                index: RetrievalIndex, *, expand_tiles: int,
+                similarity: str = "cosine",
+                exclude_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Tile-pruned top-k item ids per user: coarse centroid scoring picks
+    ``expand_tiles`` tiles, exact scoring runs on their members only.
+
+    The candidate block is a fixed ``(B, expand_tiles * tile_rows)`` layout
+    (static in every shape), so the program is jit-stable across requests
+    and refreshes.  ``exclude_mask`` (B, I) masks training positives, read
+    by candidate gather — never materialized beyond the candidate block.
+    Returns (B, min(k, candidates)) ids; padding slots that survive into the
+    top-k (only possible when k exceeds the number of live candidates) come
+    back as -1, never as a phantom item id.  With ``expand_tiles >=
+    index.num_tiles`` the result is exact (full-catalog parity with
+    ``mf.topk_all_items`` as a set).
+    """
+    if expand_tiles < 1:
+        raise ValueError(f"expand_tiles must be >= 1, got {expand_tiles}")
+    expand = min(int(expand_tiles), index.num_tiles)
+    u = params.user_table[user_ids]                              # (B, K)
+
+    # Stage 1 — coarse: score one centroid per tile.  Centroids are already
+    # unit-norm under cosine, so plain dot against the normalized user ranks
+    # tiles identically to cosine.
+    uq = _normalize(u) if similarity == "cosine" else u
+    coarse = uq @ index.centroids.T                              # (B, T)
+    _, top_tiles = jax.lax.top_k(coarse, expand)                 # (B, E)
+
+    # Stage 2 — exact scoring on the surviving fixed-size candidate block.
+    cand = index.member_ids[top_tiles]                           # (B, E, R)
+    cand = cand.reshape(cand.shape[0], -1)                       # (B, C)
+    dead = cand < 0
+    safe = jnp.where(dead, 0, cand)
+    cand_e = params.item_table[safe]                             # (B, C, K)
+    scores = jnp.einsum("bk,bck->bc", u, cand_e)
+    if similarity == "cosine":
+        un = jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-12)
+        cn = jnp.linalg.norm(cand_e, axis=-1).clip(1e-12)
+        scores = scores / un / cn
+    if exclude_mask is not None:
+        dead = dead | jnp.take_along_axis(exclude_mask, safe, axis=1)
+    scores = jnp.where(dead, -jnp.inf, scores)
+    kk = min(int(k), cand.shape[1])
+    _, idx = jax.lax.top_k(scores, kk)
+    return jnp.take_along_axis(cand, idx, axis=1)                # (B, kk)

@@ -3,7 +3,8 @@ MF top-k recommendation serving.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --prompt-len 16 --decode-steps 8 --batch 4
-    PYTHONPATH=src python -m repro.launch.serve --mf --topk 10 --item-chunk 512
+    PYTHONPATH=src python -m repro.launch.serve --mf --topk 10 \
+        --pruner tile --expand-tiles 4 --max-batch 32 --max-wait-ms 2
 """
 from __future__ import annotations
 
@@ -18,15 +19,25 @@ def serve_mf(args) -> None:
     """MF top-k recommendation serving through the unified engine API.
 
     Trains briefly (``resolve_engine`` picks the execution backend), then
-    serves batched top-k requests via the chunked ``mf.topk_all_items`` —
-    the full (B, I) score matrix is never materialized, so the same path
-    scales to paper-sized catalogs (9.4M items).
+    stands up a :class:`repro.launch.server.BatchingRecommender`: the
+    serving path is traced + compiled at startup (cold-start is paid before
+    the first request, asserted via the server's trace counter), concurrent
+    single-user requests are coalesced into one (B, ·) device call behind a
+    ``--max-wait-ms`` deadline, and ``--pruner tile`` swaps the chunked
+    exact ``mf.topk_all_items`` for the tile-pruned candidate path
+    (``retrieval.topk_pruned``, expansion budget ``--expand-tiles``).  The
+    served tables are the trainer's device-resident ``MFState`` — after an
+    online training burst, ``refresh_from`` re-points the compiled program
+    at the new tables (and re-centers the index) without a host round-trip.
     """
+    import threading
+
     import numpy as np
 
-    from repro.core import mf
+    from repro.core import mf, retrieval
     from repro.core.engine import resolve_engine
     from repro.data import pipeline
+    from repro.launch.server import BatchingRecommender
     from repro.train import trainer
 
     users, items = 1000, 2000
@@ -43,26 +54,70 @@ def serve_mf(args) -> None:
                                 batch_size=128, engine=engine,
                                 log=lambda *_: None)
 
+    index = None
+    if args.pruner == "tile":
+        index = retrieval.build_retrieval_index(
+            state.params.item_table, tile_rows=args.tile_rows)
+        print(f"[serve] pruner=tile: {index.num_tiles} tiles x "
+              f"{index.tile_rows} rows, expanding {args.expand_tiles}")
+
     train_mask = jnp.asarray(ds.train_mask())
+    t0 = time.perf_counter()
+    server = BatchingRecommender(
+        state, args.topk, pruner=args.pruner, index=index,
+        expand_tiles=args.expand_tiles, max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms, item_chunk=args.item_chunk,
+        exclude_mask=train_mask)
+    print(f"[serve] warmup (trace+compile) in "
+          f"{1e3 * (time.perf_counter() - t0):.1f} ms; "
+          f"traces={server.trace_count}")
 
-    @jax.jit
-    def recommend(user_ids):
-        return mf.topk_all_items(state.params, user_ids, args.topk,
-                                 item_chunk=args.item_chunk,
-                                 exclude_mask=train_mask[user_ids])
-
+    # Concurrent single-user clients: the queue coalesces them into (B, ·)
+    # device calls behind the max-wait deadline.
     rng = np.random.default_rng(0)
-    for batch_size in (1, 16, 128):
-        req = jnp.asarray(rng.integers(0, users, batch_size), jnp.int32)
-        recs = jax.block_until_ready(recommend(req))   # warmup + correctness
-        t0 = time.perf_counter()
-        for _ in range(20):
-            jax.block_until_ready(recommend(req))
-        dt = (time.perf_counter() - t0) / 20
-        print(f"batch={batch_size:4d}: {1e3 * dt:6.2f} ms/request-batch "
-              f"({1e6 * dt / batch_size:7.1f} us/user)  "
-              f"top-{args.topk} for user {int(req[0])}: "
-              f"{np.asarray(recs[0])[:5]}")
+    n_requests, lat_ms = 256, []
+    lock = threading.Lock()
+
+    def client(uid: int):
+        t = time.perf_counter()
+        server.recommend(uid)
+        with lock:
+            lat_ms.append(1e3 * (time.perf_counter() - t))
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client,
+                                args=(int(rng.integers(0, users)),))
+               for _ in range(n_requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lat = np.sort(lat_ms)
+    stats = server.stats
+    print(f"[serve] {n_requests} concurrent requests in {wall * 1e3:.1f} ms: "
+          f"qps={n_requests / wall:,.0f} "
+          f"p50={lat[len(lat) // 2]:.2f} ms "
+          f"p99={lat[int(len(lat) * 0.99)]:.2f} ms "
+          f"({stats['device_calls']} device calls, "
+          f"traces={stats['traces']})")
+
+    uid = int(rng.integers(0, users))
+    recs = server.recommend(uid)
+    print(f"[serve] top-{args.topk} for user {uid} ({args.pruner}): "
+          f"{recs[:5]}")
+
+    # Online refresh: extend the run by 50 steps (batches are pure in
+    # (seed, step), so this is the original trajectory continued), then
+    # serve the updated device-resident tables with no host round-trip.
+    state, _ = trainer.train_mf(cfg, ds, steps=args.train_steps + 50,
+                                batch_size=128, engine=engine,
+                                log=lambda *_: None)
+    server.refresh_from(state)
+    recs2 = server.recommend(uid)
+    print(f"[serve] after refresh_from (50 more steps, no retrace: "
+          f"traces={server.trace_count}): {recs2[:5]}")
+    server.stop()
 
 
 def main():
@@ -77,6 +132,18 @@ def main():
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--item-chunk", type=int, default=512,
                     help="catalog chunk for the running top-k merge")
+    ap.add_argument("--pruner", choices=("exact", "tile"), default="exact",
+                    help="exact: chunked full-catalog top-k; tile: "
+                         "tile-pruned candidates (retrieval.topk_pruned)")
+    ap.add_argument("--expand-tiles", type=int, default=4,
+                    help="tile pruner expansion budget (top-T tiles whose "
+                         "members get exact scoring)")
+    ap.add_argument("--tile-rows", type=int, default=128,
+                    help="index tile size (rows per tile)")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="request coalescing: max requests per device call")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="request coalescing: max wait for a fuller batch")
     ap.add_argument("--train-steps", type=int, default=300)
     ap.add_argument("--backend", default=None)
     ap.add_argument("--sampler", default=None)

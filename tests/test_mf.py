@@ -5,12 +5,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import aggregation as agg
 from repro.core.engine import resolve_engine
 from repro.core.mf import (
     Batch,
     MFConfig,
+    MFParams,
     heat_train_step,
     init_mf,
     scores_all_items,
@@ -154,6 +157,41 @@ def test_scores_chunked_matches_dense():
     chunked = scores_all_items(state.params, jnp.arange(7), item_chunk=48)
     np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
                                atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(num_items=st.integers(3, 40), chunk=st.integers(1, 50),
+       k=st.integers(1, 60), seed=st.integers(0, 10_000))
+def test_topk_chunked_bit_identical_to_stable_argsort(num_items, chunk, k,
+                                                      seed):
+    """The chunked running merge is *bit-identical* to a dense stable
+    descending argsort — the tie-break contract, not just set equality.
+
+    Earlier chunks occupy earlier concatenation positions in the merge and
+    ``lax.top_k`` prefers the lower index among equal scores, so ties must
+    resolve to the lowest item id, exactly like ``np.argsort(-s,
+    kind="stable")``.  Embeddings are integer-quantized and scored with
+    ``similarity="dot"`` so every score is exactly representable in float32
+    (exact ties, no reduction-order noise) and ties are *common*: entries in
+    {-2..2} at dim 4 collide constantly, and a planted duplicate item row
+    guarantees at least one.  The draw sweeps uneven ``item_chunk``
+    remainders (chunk does not divide num_items), chunk >= num_items (the
+    dense path), and k > num_items (the clamp: result is (B, min(k, I)),
+    no phantom ids).
+    """
+    r = np.random.default_rng(seed)
+    dim, n_users = 4, 5
+    items = r.integers(-2, 3, (num_items, dim)).astype(np.float32)
+    items[num_items // 2] = items[0]          # guaranteed exact tie
+    users = r.integers(-2, 3, (n_users, dim)).astype(np.float32)
+    params = MFParams(jnp.asarray(users), jnp.asarray(items), None)
+
+    s = users @ items.T                       # exact small-int float32
+    want = np.argsort(-s, axis=1, kind="stable")[:, :min(k, num_items)]
+    got = topk_all_items(params, jnp.arange(n_users), k,
+                         similarity="dot", item_chunk=chunk)
+    assert got.shape == (n_users, min(k, num_items))
+    np.testing.assert_array_equal(want, np.asarray(got))
 
 
 @pytest.mark.parametrize("chunk", [None, 48, 9])

@@ -1,0 +1,178 @@
+"""Tile-pruned retrieval (core/retrieval.py): index construction invariants,
+full-expansion parity with the exact top-k, refresh-without-rebuild, and the
+fixed-size candidate layout's -1 padding contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mf, retrieval
+
+NUM_USERS, NUM_ITEMS, DIM = 64, 500, 16   # 500 % 128 != 0: padded last tile
+
+
+def _params(seed=0, num_items=NUM_ITEMS, clustered=False):
+    r = np.random.default_rng(seed)
+    if clustered:
+        centers = r.normal(size=(8, DIM)).astype(np.float32)
+        ic = r.integers(0, 8, num_items)
+        uc = r.integers(0, 8, NUM_USERS)
+        items = centers[ic] + 0.3 * r.normal(size=(num_items, DIM))
+        users = centers[uc] + 0.3 * r.normal(size=(NUM_USERS, DIM))
+    else:
+        items = r.normal(size=(num_items, DIM))
+        users = r.normal(size=(NUM_USERS, DIM))
+    return mf.MFParams(jnp.asarray(users, jnp.float32),
+                       jnp.asarray(items, jnp.float32), None)
+
+
+def _recall(got, want):
+    return float(np.mean([len(set(a.tolist()) & set(b.tolist())) / len(b)
+                          for a, b in zip(np.asarray(got), np.asarray(want))]))
+
+
+def test_index_partition_invariants():
+    """member_ids is a fixed-size partition: every item id exactly once,
+    -1 only in padding slots of the last tile, centroids unit-norm under
+    cosine."""
+    params = _params()
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    ids = np.asarray(idx.member_ids)
+    assert ids.shape == (4, 128)             # ceil(500/128) tiles, all full
+    valid = ids[ids >= 0]
+    assert sorted(valid.tolist()) == list(range(NUM_ITEMS))
+    assert (ids < 0).sum() == 4 * 128 - NUM_ITEMS
+    assert (ids.reshape(-1)[:NUM_ITEMS] >= 0).all()   # padding is trailing
+    norms = np.linalg.norm(np.asarray(idx.centroids), axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+def test_full_expansion_parity_with_exact_topk():
+    """Expanding every tile makes the candidate set the whole catalog: the
+    returned id set equals mf.topk_all_items exactly (recall@k == 1.0) —
+    tie-free random embeddings, so no float tie-swap caveat applies."""
+    params = _params()
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    users = jnp.arange(32)
+    want = np.asarray(mf.topk_all_items(params, users, 10, item_chunk=96))
+    got = np.asarray(retrieval.topk_pruned(params, users, 10, idx,
+                                           expand_tiles=idx.num_tiles))
+    assert got.shape == want.shape
+    for g, w in zip(got, want):
+        assert set(g.tolist()) == set(w.tolist())
+    assert _recall(got, want) == 1.0
+
+
+def test_full_expansion_parity_with_exclusion():
+    params = _params(seed=3)
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    users = jnp.arange(16)
+    r = np.random.default_rng(0)
+    excl = jnp.asarray(r.integers(0, 2, (16, NUM_ITEMS)).astype(bool))
+    want = np.asarray(mf.topk_all_items(params, users, 8, item_chunk=64,
+                                        exclude_mask=excl))
+    got = np.asarray(retrieval.topk_pruned(params, users, 8, idx,
+                                           expand_tiles=idx.num_tiles,
+                                           exclude_mask=excl))
+    for g, w, e in zip(got, want, np.asarray(excl)):
+        assert set(g.tolist()) == set(w.tolist())
+        assert not e[g].any()                # nothing excluded leaks through
+
+
+def test_partial_expansion_recall_on_clustered_embeddings():
+    """On CF-shaped (clustered) embeddings a small expansion budget keeps
+    most of the exact answer — and more budget never hurts at full
+    expansion."""
+    params = _params(seed=1, clustered=True)
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=32)
+    users = jnp.arange(NUM_USERS)
+    want = mf.topk_all_items(params, users, 10)
+    rec4 = _recall(retrieval.topk_pruned(params, users, 10, idx,
+                                         expand_tiles=4), want)
+    rec_full = _recall(retrieval.topk_pruned(params, users, 10, idx,
+                                             expand_tiles=idx.num_tiles),
+                       want)
+    assert rec4 >= 0.8                       # 4 of 16 tiles already suffice
+    assert rec_full == 1.0
+    assert rec_full >= rec4
+
+
+def test_k_clamp_and_padding_slots_return_minus_one():
+    """k beyond the live candidate count: every valid item id appears exactly
+    once, the overflow slots are -1 (never a phantom id)."""
+    params = _params(seed=2, num_items=70)   # 70 items, 2 tiles of 64
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=64)
+    got = np.asarray(retrieval.topk_pruned(params, jnp.arange(5), 999, idx,
+                                           expand_tiles=idx.num_tiles))
+    assert got.shape == (5, 2 * 64)          # min(k, C) with C = T*R
+    for row in got:
+        live = row[row >= 0]
+        assert sorted(live.tolist()) == list(range(70))
+        assert (row[70:] == -1).all()        # dead slots sort last
+
+
+def test_topk_pruned_never_returns_padding_when_k_fits():
+    params = _params()
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    got = np.asarray(retrieval.topk_pruned(params, jnp.arange(16), 10, idx,
+                                           expand_tiles=2))
+    assert (got >= 0).all()
+    assert (got < NUM_ITEMS).all()
+
+
+def test_refresh_index_recenters_from_live_table():
+    """refresh_index under a perturbed table == rebuilding centroids by hand
+    from the same member partition; member_ids are untouched."""
+    params = _params()
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    new_table = params.item_table + 0.5
+    ref = retrieval.refresh_index(idx, new_table)
+    np.testing.assert_array_equal(np.asarray(ref.member_ids),
+                                  np.asarray(idx.member_ids))
+    tbl = np.asarray(new_table, np.float64)
+    ids = np.asarray(idx.member_ids)
+    for t in range(idx.num_tiles):
+        members = ids[t][ids[t] >= 0]
+        rows = tbl[members]
+        rows = rows / np.linalg.norm(rows, axis=1, keepdims=True)
+        want = rows.mean(axis=0)
+        want = want / np.linalg.norm(want)
+        np.testing.assert_allclose(np.asarray(ref.centroids[t]), want,
+                                   atol=1e-5)
+    # refresh after a real change must move the centroids
+    assert not np.allclose(np.asarray(ref.centroids),
+                           np.asarray(idx.centroids))
+
+
+def test_build_refresh_agree_on_fresh_table():
+    """build's centroids ARE refresh's centroids (one definition)."""
+    params = _params()
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    again = retrieval.refresh_index(idx, params.item_table)
+    np.testing.assert_allclose(np.asarray(again.centroids),
+                               np.asarray(idx.centroids), atol=1e-6)
+
+
+def test_topk_pruned_is_jittable_and_shape_stable():
+    params = _params()
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    traces = []
+
+    @jax.jit
+    def f(p, i, uids):
+        traces.append(1)
+        return retrieval.topk_pruned(p, uids, 10, i, expand_tiles=2)
+
+    a = f(params, idx, jnp.arange(8))
+    b = f(params, idx, jnp.arange(8, 16))    # same shape, new values
+    assert a.shape == b.shape == (8, 10)
+    assert len(traces) == 1                  # one compiled program
+
+
+def test_bad_args_raise():
+    params = _params()
+    idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
+    with pytest.raises(ValueError):
+        retrieval.topk_pruned(params, jnp.arange(4), 10, idx, expand_tiles=0)
+    with pytest.raises(ValueError):
+        retrieval.build_retrieval_index(params.item_table, tile_rows=0)
