@@ -57,7 +57,10 @@ def _window_runner(flush_every):
     rng = jax.random.PRNGKey(2)
     step = functools.partial(mf.heat_train_step, cfg=tcfg)
 
-    @jax.jit
+    # No donation on purpose: the interleaved timer re-calls this window on
+    # the SAME tstate across iterations; donating would consume it after the
+    # first timed call.
+    @jax.jit  # heatlint: disable=HL103 -- timing loop reuses the input state across calls
     def window(state, batch, key):
         def body(st, i):
             st, loss = step(st, batch, jax.random.fold_in(key, i))

@@ -101,10 +101,14 @@ def run():
                                             tile_rows=TILE_ROWS, seed=0)
     rows = []
 
-    def record(name, us, derived, **extra):
+    # Serving runs plain jitted XLA on the host backend — no pallas anywhere
+    # on the path, so every row is mode="native" (check.py validates the
+    # label against the same vocabulary as the backends matrix).  ``mode``
+    # is keyword-required so no row can ship unlabeled (heatlint HL105).
+    def record(name, us, derived, *, mode, **extra):
         emit(name, us, derived)
         rows.append({"name": name, "us_per_call": us, "derived": derived,
-                     **extra})
+                     "mode": mode, **extra})
 
     exact = jax.jit(lambda uids: mf.topk_all_items(
         params, uids, TOPK, item_chunk=8192))
@@ -121,15 +125,15 @@ def run():
         record(f"serve/exact/B={b}", q["p50"],
                f"p50_ms={q['p50'] / 1e3:.2f} p99_ms={q['p99'] / 1e3:.2f} "
                f"qps={qps[b]:.0f}",
-               batch=b, path="exact", p50_us=q["p50"], p99_us=q["p99"],
-               qps=qps[b])
+               mode="native", batch=b, path="exact",
+               p50_us=q["p50"], p99_us=q["p99"], qps=qps[b])
 
     batching_speedup = qps[32] / qps[1]
     flag = " REGRESSION" if batching_speedup < BATCHING_GATE else ""
     record("serve/exact/batching", 0.0,
            f"qps_B32_over_B1={batching_speedup:.2f}x gate>={BATCHING_GATE}x"
            f"{flag}",
-           path="exact", batching_speedup=batching_speedup)
+           mode="native", path="exact", batching_speedup=batching_speedup)
 
     # -- pruned path: latency + recall across expansion budgets -------------
     exact_ids = {b: np.asarray(exact(reqs[b])) for b in BATCH_SIZES}
@@ -153,8 +157,8 @@ def run():
                f"p99_ms={q['p99'] / 1e3:.2f} "
                f"speedup_vs_exact={speedup:.2f}x"
                f"{' (full expansion)' if full else ''}{flag}",
-               batch=32, path="pruned", expand_tiles=t, recall=rec,
-               p50_us=q["p50"], p99_us=q["p99"],
+               mode="native", batch=32, path="pruned", expand_tiles=t,
+               recall=rec, p50_us=q["p50"], p99_us=q["p99"],
                default_budget=(t == DEFAULT_EXPAND))
 
     payload = {

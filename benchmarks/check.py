@@ -15,6 +15,12 @@ write (paths overridable via ``BENCH_RUN_JSON`` / ``BENCH_BACKENDS_JSON``):
     REGRESSION (batched QPS fell below the >= 2x gate), RECALL_FLOOR
     (tile pruner under the recall gate at the default expansion budget), or
     PARITY (full tile expansion no longer matches the exact top-k) flag;
+  * BENCH_serving.json (path overridable via ``BENCH_SERVING_JSON``) is
+    schema-valid: config complete, every row carries the full key set for
+    its family (exact / batching / pruned) with sane types, every row is
+    mode-labeled ``native`` (the serving path is plain jitted XLA — heatlint
+    HL105 enforces the label statically, this gate on the shipped artifact),
+    and the pruned sweep includes its ``default_budget`` gate row;
   * BENCH_backends.json has at least one ``mf``-layout and one ``head``-layout
     row for every *registered* loss backend — a partial file (a backend
     silently skipped) fails instead of shipping;
@@ -35,6 +41,12 @@ import sys
 
 RUN_JSON = os.environ.get("BENCH_RUN_JSON", "BENCH_run.json")
 BACKENDS_JSON = os.environ.get("BENCH_BACKENDS_JSON", "BENCH_backends.json")
+SERVING_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+#: the execution-mode vocabulary every artifact row must label itself with
+#: (heatlint HL105 enforces the label statically; this gate enforces it on
+#: the artifact actually shipped).
+MODES = ("interpret", "compiled", "native")
 
 
 def run_problems(path: str = RUN_JSON) -> list[str]:
@@ -127,15 +139,99 @@ def backends_problems(path: str = BACKENDS_JSON) -> list[str]:
     return problems
 
 
+# ---------------------------------------------------------------------------
+# BENCH_serving.json schema
+# ---------------------------------------------------------------------------
+
+_NUM = (int, float)
+#: required keys (key -> type) shared by every serving row
+_SERVING_ROW_BASE = {"name": str, "us_per_call": _NUM, "derived": str,
+                     "mode": str}
+#: additional required keys per row family (matched by name prefix)
+_SERVING_ROW_KINDS = (
+    ("serve/exact/batching", {"path": str, "batching_speedup": _NUM}),
+    ("serve/exact/B=", {"path": str, "batch": int, "p50_us": _NUM,
+                        "p99_us": _NUM, "qps": _NUM}),
+    ("serve/pruned/", {"path": str, "batch": int, "expand_tiles": int,
+                       "recall": _NUM, "p50_us": _NUM, "p99_us": _NUM,
+                       "default_budget": bool}),
+)
+_SERVING_CONFIG_KEYS = ("num_items", "num_users", "emb_dim", "topk",
+                        "tile_rows", "num_tiles", "default_expand_tiles",
+                        "recall_gate", "parity_gate", "batching_gate")
+
+
+def _typed(value, types) -> bool:
+    # bool is an int subclass; only accept it where bool is asked for
+    if isinstance(value, bool):
+        return types is bool
+    return isinstance(value, types)
+
+
+def serving_problems(path: str = SERVING_JSON) -> list[str]:
+    """Schema-validate the standalone serving artifact (bench_serving.py):
+    config complete, every row fully keyed for its family, every row
+    mode-labeled from the shared vocabulary — a half-written or unlabeled
+    artifact fails instead of shipping as a latency/QPS claim."""
+    if not os.path.exists(path):
+        return [f"{path} was never written — bench_serving did not run"]
+    with open(path) as f:
+        payload = json.load(f)
+    problems = []
+    config = payload.get("config", {})
+    for key in _SERVING_CONFIG_KEYS:
+        if key not in config:
+            problems.append(f"{path} config is missing {key!r}")
+    rows = payload.get("rows", [])
+    if not rows:
+        problems.append(f"{path} has no rows")
+    for i, row in enumerate(rows):
+        who = f"{path} row {i} ({row.get('name', '?')!r})"
+        spec = dict(_SERVING_ROW_BASE)
+        for prefix, extra in _SERVING_ROW_KINDS:
+            if str(row.get("name", "")).startswith(prefix):
+                spec.update(extra)
+                break
+        else:
+            problems.append(f"{who}: unrecognized row family (expected a "
+                            "serve/exact/* or serve/pruned/* name)")
+        for key, types in sorted(spec.items()):
+            if key not in row:
+                problems.append(f"{who}: missing required key {key!r}")
+            elif not _typed(row[key], types):
+                problems.append(f"{who}: key {key!r} has "
+                                f"{type(row[key]).__name__} value "
+                                f"{row[key]!r}, expected {types}")
+        mode = row.get("mode")
+        if mode is not None and mode not in MODES:
+            problems.append(f"{who}: mode={mode!r} not in {MODES}")
+        elif mode is not None and mode != "native":
+            # the serving path is plain jitted XLA — no pallas anywhere on
+            # it, so any other label means the row was mislabeled (or the
+            # path changed and this gate must learn the new truth).
+            problems.append(f"{who}: serving rows must be mode='native' "
+                            f"(plain jitted XLA), got {mode!r}")
+        rec = row.get("recall")
+        if isinstance(rec, _NUM) and not isinstance(rec, bool) \
+                and not 0.0 <= rec <= 1.0:
+            problems.append(f"{who}: recall={rec!r} outside [0, 1]")
+    pruned = [r for r in rows
+              if str(r.get("name", "")).startswith("serve/pruned/")]
+    if pruned and not any(r.get("default_budget") is True for r in pruned):
+        problems.append(f"{path}: no pruned row is marked default_budget — "
+                        "the recall gate's target row is missing")
+    return problems
+
+
 def main() -> int:
-    problems = run_problems() + backends_problems()
+    problems = run_problems() + backends_problems() + serving_problems()
     for p in problems:
         print(f"bench-gate: {p}", file=sys.stderr)
     if problems:
         return 1
     print("bench-gate: all suites ok, loop/ rows regression-free, shard/ "
-          "rows present, serve/ rows present and unflagged, backends matrix "
-          "complete and mode-labeled")
+          "rows present, serve/ rows present, schema-valid and unflagged, "
+          "backends matrix complete and mode-labeled")
     return 0
 
 

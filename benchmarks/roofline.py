@@ -185,7 +185,7 @@ def main():
             overrides[key] = int(val)
         else:
             try:
-                overrides[key] = float(val)
+                overrides[key] = float(val)  # heatlint: disable=HL107 -- CLI string parsing, host value
             except ValueError:
                 overrides[key] = val
 

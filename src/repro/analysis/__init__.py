@@ -1,0 +1,32 @@
+"""Static analysis + runtime sanitizers for the repo's JAX-idiom hazards.
+
+Two complementary halves:
+
+* :mod:`repro.analysis.rules` — the **heatlint** AST pass (pure stdlib; the
+  ``tools/heatlint.py`` CLI and the CI ``analysis`` job run it over the
+  whole tree).  Rules HL101–HL107 encode the repo's historical bug classes:
+  trace-time python RNG/hash, hidden host syncs in scan bodies, undonated
+  training windows, remainder-dropping pallas grids, unlabeled bench rows.
+* :mod:`repro.analysis.sanitize` — runtime instrumentation: the
+  :func:`sanitize` context manager (transfer guard / rank promotion /
+  debug-nans), :class:`TraceCounter` retrace budgets, and donation
+  verification for scanned carries.
+"""
+from repro.analysis.rules import (        # noqa: F401
+    RULES,
+    Violation,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.sanitize import (     # noqa: F401
+    DonationError,
+    DonationReport,
+    RetraceError,
+    Sanitizer,
+    TraceCounter,
+    assert_donation,
+    donation_report,
+    sanitize,
+    trace_counter,
+)

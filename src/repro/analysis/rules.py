@@ -1,0 +1,567 @@
+"""heatlint — AST-level JAX-hazard lint rules for this repo.
+
+The repo's worst historical bugs were JAX-*idiom* hazards, not algorithmic
+ones: the salted ``hash((seed, step))`` restart bug, per-step ``float(loss)``
+host syncs, a jitted training window that forgot to donate its carry.  Each
+rule below encodes one of those failure classes so it is caught at lint time
+instead of re-discovered per PR.
+
+Every rule has an error code and a docstring (``RULES``), and every violation
+can be suppressed *with a visible justification* at three granularities:
+
+* line-level:      ``x = hash(k)  # heatlint: disable=HL106 -- why it is ok``
+* function-level:  a disable comment on the ``def`` line covers the body
+* file-level:      ``# heatlint: disable-file=HL107`` anywhere in the file
+
+This module is deliberately **pure stdlib** (no jax import) so the CLI
+(`tools/heatlint.py`) can run it without pulling a full JAX runtime, and so
+it can lint fixture files that would not even import.
+
+Traced-region detection
+-----------------------
+Rules HL101/HL102 only apply *inside traced code*: a function is considered
+traced when it (a) carries a transform decorator (``@jax.jit``,
+``@partial(jax.jit, ...)``), (b) is passed by name or as a lambda into a
+transform call (``jax.jit(f)``, ``jax.lax.scan(body, ...)``,
+``pl.pallas_call(kernel, ...)``, ``jax.vmap`` / ``grad`` / ``cond`` /
+``while_loop`` / ``shard_map`` ...), or (c) is defined anywhere inside such a
+function.  This is a static under-approximation — a function only ever
+*called* from traced code is not marked — but it covers every scan body,
+kernel, and jitted entry point in this repo, and the escape hatch documents
+the rest.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, Optional
+
+# ---------------------------------------------------------------------------
+# Rule registry (code -> (summary, rationale)) — the single source the CLI's
+# --list-rules / --explain and the README section are generated from.
+# ---------------------------------------------------------------------------
+
+RULES: dict[str, tuple[str, str]] = {
+    "HL101": (
+        "no python RNG / hash() / id() in traced code",
+        "Inside jit/scan/vmap/pallas the python expression runs ONCE, at "
+        "trace time: hash(), id(), random.*, and np.random.* bake a "
+        "trace-time constant into the compiled program (every step reuses "
+        "it), and str hashes are salted per process, so restarts silently "
+        "diverge — the PR-4 restart bug.  Derive randomness from "
+        "jax.random.fold_in(key, step) and identity from array contents."),
+    "HL102": (
+        "no host sync (float/.item()/np.asarray/device_get) on traced values",
+        "float(x), x.item(), np.asarray(x) and jax.device_get(x) inside a "
+        "traced function either fail at trace time or, worse, silently "
+        "concretize and pin the value — inside a scan body or dispatch "
+        "window this forces a device->host round-trip per step, the §3.1 "
+        "dispatch overhead the executor exists to remove.  Keep values on "
+        "device; sync at window edges only."),
+    "HL103": (
+        "jitted training windows must declare donation",
+        "A jax.jit whose body runs a lax.scan window carries the training "
+        "state through every call; without donate_argnums/donate_argnames "
+        "XLA must keep the input buffers alive across the call, doubling "
+        "the table memory high-water mark and forcing a copy-on-write of "
+        "the carry — the executor's whole memory discipline (§4) hinges on "
+        "the donated carry being reused in place."),
+    "HL104": (
+        "pallas grids must not drop remainder rows",
+        "A pallas_call grid computed with floor division (n // block) "
+        "silently skips the remainder rows when block does not divide n — "
+        "the kernel 'works' on aligned bench shapes and corrupts results "
+        "on ragged ones.  Use pl.cdiv(n, block) (partial last block, "
+        "masked in-kernel) or assert divisibility; statically known "
+        "(literal) grid sizes must divide exactly."),
+    "HL105": (
+        "bench artifact rows must carry an execution-mode label",
+        "Interpret-mode pallas rows time the Pallas *interpreter*, not a "
+        "kernel: a JSON row without a mode label lets an interpret timing "
+        "masquerade as a kernel speedup claim (the PR-6 labeling bug).  "
+        "Every row appended to a bench artifact must carry "
+        "mode=interpret|compiled|native, validated by benchmarks/check.py."),
+    "HL106": (
+        "no hash() in library code (salted / undocumented derivation)",
+        "str/bytes hashes are salted per process (PYTHONHASHSEED), so any "
+        "hash()-derived seed breaks the bit-exact (seed, step) restart "
+        "contract the checkpoint machinery depends on; even int-tuple "
+        "hashes are an undocumented derivation.  Use zlib.crc32 for "
+        "strings or seed np.random.default_rng((seed, step)) directly."),
+    "HL107": (
+        "no per-iteration host sync on loop-computed device values",
+        "float(loss) / loss.item() inside the step loop blocks the host on "
+        "every device call — the per-step dispatch stall of §3.1 that the "
+        "K-step executor removes.  Accumulate device scalars and read them "
+        "back in bulk at the window edge (one sync per window)."),
+}
+
+# Transform entry points whose function-valued arguments are traced.
+_TRANSFORMS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.jacfwd", "jax.jacrev", "jax.hessian", "jax.checkpoint", "jax.remat",
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.fori_loop",
+    "jax.lax.cond", "jax.lax.switch", "jax.lax.map",
+    "jax.lax.associative_scan", "jax.lax.custom_root",
+    "jax.experimental.pallas.pallas_call",
+    "jax.experimental.shard_map.shard_map",
+    "jax.custom_vjp", "jax.custom_jvp",
+}
+_SCAN_CALLS = {"jax.lax.scan"}
+_PALLAS_CALLS = {"jax.experimental.pallas.pallas_call"}
+
+_DISABLE_RE = re.compile(r"#\s*heatlint:\s*disable=([A-Za-z0-9,\s]+?)(?:\s*(?:--|—|$))")
+_DISABLE_FILE_RE = re.compile(r"#\s*heatlint:\s*disable-file=([A-Za-z0-9,\s]+?)(?:\s*(?:--|—|$))")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+def _codes(spec: str) -> set[str]:
+    return {c.strip().upper() for c in spec.split(",") if c.strip()}
+
+
+class _Aliases:
+    """Resolve `pl.pallas_call`-style dotted names to fully qualified ones
+    via the module's import statements."""
+
+    def __init__(self, tree: ast.Module):
+        self.map: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.map[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    self.map[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def qual(self, node: ast.AST) -> Optional[str]:
+        """Dotted qualified name of a Name/Attribute chain, or None."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.map.get(node.id, node.id)
+        return ".".join([head] + list(reversed(parts)))
+
+
+class ModuleLinter:
+    """Lint one parsed module.  ``relpath`` scopes path-dependent rules:
+    HL105 applies under ``benchmarks/``, HL106 under ``src/``, HL107 skips
+    ``tests/`` (host syncs in test assertions are the point of the test)."""
+
+    def __init__(self, tree: ast.Module, source: str, path: str,
+                 relpath: Optional[str] = None):
+        self.tree = tree
+        self.path = path
+        self.rel = (relpath if relpath is not None else path).replace(os.sep, "/")
+        self.aliases = _Aliases(tree)
+        self.violations: list[Violation] = []
+        self._parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self._parents[child] = node
+        self._defs_by_name: dict[str, list[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._defs_by_name.setdefault(node.name, []).append(node)
+        self._traced_roots: set[ast.AST] = set()
+        self._collect_traced_roots()
+
+        self._line_disables: dict[int, set[str]] = {}
+        self._file_disables: set[str] = set()
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _DISABLE_RE.search(line)
+            if m:
+                self._line_disables[i] = _codes(m.group(1))
+            m = _DISABLE_FILE_RE.search(line)
+            if m:
+                self._file_disables |= _codes(m.group(1))
+
+    # -- traced-region machinery -------------------------------------------
+
+    def _mark(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Lambda):
+            self._traced_roots.add(node)
+        elif isinstance(node, ast.Name):
+            for d in self._defs_by_name.get(node.id, ()):
+                self._traced_roots.add(d)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._traced_roots.add(node)
+
+    def _decorator_is_transform(self, dec: ast.AST) -> bool:
+        q = self.aliases.qual(dec)
+        if q in _TRANSFORMS:
+            return True
+        if isinstance(dec, ast.Call):
+            fq = self.aliases.qual(dec.func)
+            if fq in _TRANSFORMS:
+                return True
+            if fq in ("functools.partial", "partial") and dec.args:
+                return self.aliases.qual(dec.args[0]) in _TRANSFORMS
+        return False
+
+    def _collect_traced_roots(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                q = self.aliases.qual(node.func)
+                if q in _TRANSFORMS:
+                    for arg in node.args:
+                        if isinstance(arg, (ast.Lambda, ast.Name)):
+                            self._mark(arg)
+                        elif isinstance(arg, ast.Call):
+                            # jax.jit(partial(step, cfg=...)) / jit(grad(f))
+                            fq = self.aliases.qual(arg.func)
+                            if fq in ("functools.partial", "partial") and arg.args:
+                                self._mark(arg.args[0])
+                            elif fq in _TRANSFORMS and arg.args:
+                                self._mark(arg.args[0])
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(self._decorator_is_transform(d) for d in node.decorator_list):
+                    self._traced_roots.add(node)
+
+    def _is_traced(self, node: ast.AST) -> bool:
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if cur in self._traced_roots:
+                return True
+            cur = self._parents.get(cur)
+        return False
+
+    def _enclosing_def(self, node: ast.AST):
+        cur = self._parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self._parents.get(cur)
+        return None
+
+    # -- reporting ----------------------------------------------------------
+
+    def _suppressed(self, code: str, node: ast.AST) -> bool:
+        if code in self._file_disables or "ALL" in self._file_disables:
+            return True
+        lines = {getattr(node, "lineno", 0)}
+        for fn in (node, self._enclosing_def(node)):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                lines.add(fn.lineno)
+                lines.update(d.lineno for d in fn.decorator_list)
+        for ln in lines:
+            dis = self._line_disables.get(ln, ())
+            if code in dis or "ALL" in dis:
+                return True
+        return False
+
+    def _report(self, code: str, node: ast.AST, message: str) -> None:
+        if self._suppressed(code, node):
+            return
+        v = Violation(code, self.path, getattr(node, "lineno", 0),
+                      getattr(node, "col_offset", 0), message)
+        if v not in self.violations:    # e.g. two floordivs in one grid tuple
+            self.violations.append(v)
+
+    # -- rules --------------------------------------------------------------
+
+    def run(self) -> list[Violation]:
+        in_src = "src/" in f"/{self.rel}" or self.rel.startswith("src")
+        in_benchmarks = "benchmarks/" in f"/{self.rel}"
+        in_tests = "tests/" in f"/{self.rel}"
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._check_traced_hazards(node)
+                self._check_jit_donation_call(node)
+                self._check_pallas_grid(node)
+                if in_benchmarks:
+                    self._check_bench_mode_label(node)
+                if in_src:
+                    self._check_salted_hash(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_jit_donation_decorator(node)
+            elif isinstance(node, (ast.For, ast.While)) and not in_tests:
+                self._check_loop_host_sync(node)
+        return self.violations
+
+    # HL101 / HL102 ---------------------------------------------------------
+
+    def _check_traced_hazards(self, node: ast.Call) -> None:
+        if not self._is_traced(node):
+            return
+        q = self.aliases.qual(node.func)
+        if q in ("hash", "id"):
+            self._report("HL101", node,
+                         f"{q}() in traced code runs once at trace time "
+                         "(and str hashes are per-process salted); derive "
+                         "from jax.random / array contents instead")
+        elif q and (q.startswith("random.") or q.startswith("numpy.random.")):
+            self._report("HL101", node,
+                         f"{q}() in traced code bakes a trace-time constant "
+                         "into the compiled program; use jax.random with a "
+                         "fold_in-derived key")
+        if q == "float":
+            self._report("HL102", node,
+                         "float() on a traced value concretizes at trace "
+                         "time / syncs per step; keep it on device and read "
+                         "back at the window edge")
+        elif q in ("numpy.asarray", "numpy.array", "jax.device_get"):
+            self._report("HL102", node,
+                         f"{q}() inside traced code forces a device->host "
+                         "round-trip per step; hoist it to the window edge")
+        elif (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+              and not node.args and not node.keywords):
+            self._report("HL102", node,
+                         ".item() inside traced code syncs per step; keep "
+                         "device scalars and bulk-read at the edge")
+
+    # HL103 -----------------------------------------------------------------
+
+    def _contains_scan(self, fn_node: ast.AST) -> bool:
+        for sub in ast.walk(fn_node):
+            if isinstance(sub, ast.Call) and \
+                    self.aliases.qual(sub.func) in _SCAN_CALLS:
+                return True
+        return False
+
+    def _check_jit_donation_call(self, node: ast.Call) -> None:
+        if self.aliases.qual(node.func) != "jax.jit" or not node.args:
+            return
+        target = node.args[0]
+        fns: list[ast.AST] = []
+        if isinstance(target, ast.Lambda):
+            fns = [target]
+        elif isinstance(target, ast.Name):
+            fns = list(self._defs_by_name.get(target.id, ()))
+        if not any(self._contains_scan(f) for f in fns):
+            return
+        if not any(kw.arg in ("donate_argnums", "donate_argnames")
+                   for kw in node.keywords):
+            self._report("HL103", node,
+                         "jax.jit wraps a lax.scan training window without "
+                         "donate_argnums/donate_argnames — the carry is "
+                         "copied instead of reused, doubling table memory")
+
+    def _check_jit_donation_decorator(self, node) -> None:
+        for dec in node.decorator_list:
+            if self.aliases.qual(dec) == "jax.jit" and self._contains_scan(node):
+                self._report("HL103", node,
+                             f"@jax.jit on scan-window '{node.name}' cannot "
+                             "declare donation; use jax.jit(fn, "
+                             "donate_argnums=...) so the carry is reused")
+
+    # HL104 -----------------------------------------------------------------
+
+    def _resolve_local(self, node: ast.AST, at: ast.AST) -> ast.AST:
+        """Follow one level of `grid = <expr>` assignment in the enclosing
+        function so `grid=grid` call sites still get checked."""
+        if not isinstance(node, ast.Name):
+            return node
+        enc = self._enclosing_def(at) or self.tree
+        for sub in ast.walk(enc):
+            if isinstance(sub, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == node.id
+                    for t in sub.targets):
+                return sub.value
+        return node
+
+    def _asserted_divisible(self, at: ast.AST) -> set[tuple[str, str]]:
+        """(n, b) name pairs for which the enclosing function asserts
+        ``n % b == 0`` — those floor divisions are exact by contract."""
+        enc = self._enclosing_def(at) or self.tree
+        pairs: set[tuple[str, str]] = set()
+        for sub in ast.walk(enc):
+            if not isinstance(sub, ast.Assert):
+                continue
+            for cmp_ in ast.walk(sub.test):
+                if (isinstance(cmp_, ast.Compare)
+                        and isinstance(cmp_.left, ast.BinOp)
+                        and isinstance(cmp_.left.op, ast.Mod)
+                        and isinstance(cmp_.left.left, ast.Name)
+                        and isinstance(cmp_.left.right, ast.Name)
+                        and any(isinstance(c, ast.Constant) and c.value == 0
+                                for c in cmp_.comparators)):
+                    pairs.add((cmp_.left.left.id, cmp_.left.right.id))
+        return pairs
+
+    def _check_grid_expr(self, expr: ast.AST, call: ast.Call) -> None:
+        asserted = None
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.FloorDiv):
+                lit = (isinstance(sub.left, ast.Constant)
+                       and isinstance(sub.right, ast.Constant))
+                if lit and isinstance(sub.left.value, int) \
+                        and isinstance(sub.right.value, int) \
+                        and sub.right.value \
+                        and sub.left.value % sub.right.value == 0:
+                    continue        # statically divisible — exact by construction
+                if isinstance(sub.left, ast.Name) and \
+                        isinstance(sub.right, ast.Name):
+                    if asserted is None:
+                        asserted = self._asserted_divisible(call)
+                    if (sub.left.id, sub.right.id) in asserted:
+                        continue    # divisibility asserted in this function
+                self._report("HL104", call,
+                             "pallas_call grid uses floor division — "
+                             "remainder rows are silently dropped when the "
+                             "tile size does not divide; use pl.cdiv or a "
+                             "statically divisible shape")
+            elif isinstance(sub, ast.Call):
+                q = self.aliases.qual(sub.func) or ""
+                if q.endswith("cdiv") and len(sub.args) == 2 and all(
+                        isinstance(a, ast.Constant) and isinstance(a.value, int)
+                        for a in sub.args):
+                    n, b = sub.args[0].value, sub.args[1].value
+                    if b and n % b:
+                        self._report("HL104", call,
+                                     f"pallas_call grid cdiv({n}, {b}) is "
+                                     "statically non-divisible: the declared "
+                                     "tile size leaves a partial block — pad "
+                                     "the input or pick a dividing tile size")
+
+    def _check_pallas_grid(self, node: ast.Call) -> None:
+        q = self.aliases.qual(node.func) or ""
+        if not (q in _PALLAS_CALLS or q.endswith(".pallas_call")):
+            return
+        for kw in node.keywords:
+            if kw.arg == "grid":
+                self._check_grid_expr(self._resolve_local(kw.value, node), node)
+            elif kw.arg == "grid_spec" and isinstance(
+                    self._resolve_local(kw.value, node), ast.Call):
+                spec = self._resolve_local(kw.value, node)
+                for skw in spec.keywords:
+                    if skw.arg == "grid":
+                        self._check_grid_expr(
+                            self._resolve_local(skw.value, node), node)
+
+    # HL105 -----------------------------------------------------------------
+
+    def _check_bench_mode_label(self, node: ast.Call) -> None:
+        # rows.append({...}) / records.append({...}) with a dict literal
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "append"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id.endswith(("rows", "records"))
+                and node.args and isinstance(node.args[0], ast.Dict)):
+            keys = {k.value for k in node.args[0].keys
+                    if isinstance(k, ast.Constant)}
+            if "name" in keys or "backend" in keys:
+                if "mode" not in keys:
+                    self._report("HL105", node,
+                                 "bench artifact row has no execution-mode "
+                                 "label; add mode=interpret|compiled|native "
+                                 "so interpret timings cannot pose as "
+                                 "kernel speedups")
+        # record(...) helper calls must pass mode=
+        elif (isinstance(node.func, ast.Name) and node.func.id == "record"
+              and not any(kw.arg == "mode" for kw in node.keywords)):
+            self._report("HL105", node,
+                         "record(...) without mode= — every bench artifact "
+                         "row needs an execution-mode label")
+
+    # HL106 -----------------------------------------------------------------
+
+    def _check_salted_hash(self, node: ast.Call) -> None:
+        if self.aliases.qual(node.func) != "hash":
+            return
+        if self._is_traced(node):
+            return      # already HL101's finding — don't double-report
+        self._report("HL106", node,
+                     "hash() in library code: str hashes are per-process "
+                     "salted (breaks (seed, step) restart purity) and tuple "
+                     "hashes are an undocumented derivation; use zlib.crc32 "
+                     "or np.random.default_rng((seed, step))")
+
+    # HL107 -----------------------------------------------------------------
+
+    def _check_loop_host_sync(self, loop) -> None:
+        assigned_from_call: set[str] = set()
+        for sub in ast.walk(loop):
+            if isinstance(sub, ast.Assign) and isinstance(sub.value, ast.Call):
+                for t in sub.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            assigned_from_call.add(n.id)
+        if not assigned_from_call:
+            return
+        for sub in ast.walk(loop):
+            if not isinstance(sub, ast.Call):
+                continue
+            q = self.aliases.qual(sub.func)
+            if (q == "float" and len(sub.args) == 1
+                    and isinstance(sub.args[0], ast.Name)
+                    and sub.args[0].id in assigned_from_call):
+                self._report("HL107", sub,
+                             f"per-iteration float({sub.args[0].id}) blocks "
+                             "the host on every device call; accumulate "
+                             "device scalars and bulk-read at the window "
+                             "edge")
+            elif (isinstance(sub.func, ast.Attribute)
+                  and sub.func.attr == "item" and not sub.args
+                  and isinstance(sub.func.value, ast.Name)
+                  and sub.func.value.id in assigned_from_call):
+                self._report("HL107", sub,
+                             f"per-iteration {sub.func.value.id}.item() "
+                             "blocks the host on every device call; sync "
+                             "once at the window edge instead")
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+#: paths containing intentionally-bad lint fixtures — skipped during
+#: directory walks (explicit file arguments are always linted).
+DEFAULT_EXCLUDES = ("tests/fixtures/heatlint",)
+
+
+def lint_source(source: str, path: str = "<string>",
+                relpath: Optional[str] = None) -> list[Violation]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Violation("HL000", path, e.lineno or 0, e.offset or 0,
+                          f"syntax error: {e.msg}")]
+    return ModuleLinter(tree, source, path, relpath).run()
+
+
+def lint_file(path: str, root: Optional[str] = None) -> list[Violation]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    rel = os.path.relpath(path, root) if root else path
+    return lint_source(source, path, relpath=rel)
+
+
+def iter_python_files(paths: Iterable[str],
+                      excludes: tuple[str, ...] = DEFAULT_EXCLUDES):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p         # explicit files are always linted (fixtures too)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            posix = dirpath.replace(os.sep, "/")
+            if any(ex in posix for ex in excludes):
+                dirnames[:] = []
+                continue
+            dirnames.sort()
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_paths(paths: Iterable[str], root: Optional[str] = None,
+               excludes: tuple[str, ...] = DEFAULT_EXCLUDES) -> list[Violation]:
+    out: list[Violation] = []
+    for f in iter_python_files(paths, excludes):
+        out.extend(lint_file(f, root=root))
+    return out

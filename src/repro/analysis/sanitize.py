@@ -1,0 +1,256 @@
+"""Runtime sanitizer harness: transfer-guard / rank-promotion / retrace /
+donation instrumentation for the hot paths.
+
+The static pass (:mod:`repro.analysis.rules`) catches hazards that are
+visible in the source; this module catches the ones that only exist at run
+time — a hidden host transfer on a warm serving call, a jitted entry point
+that quietly retraces every step, a "donated" carry that XLA actually
+copied.  It generalizes the one-off trace counter PR 6 buried in
+``launch/server.py`` into reusable instrumentation:
+
+* :func:`sanitize` — context manager arming JAX's own debug machinery
+  (``transfer_guard`` on hidden transfers, ``numpy_rank_promotion='raise'``
+  on silent broadcasts, optional ``debug_nans``) around a code region.
+  Steady-state discipline: **trace/compile outside, serve inside** — a warm
+  jitted call with device-resident arguments is guard-clean; anything that
+  ships a host value per call is not, and raises.
+* :class:`TraceCounter` / :func:`trace_counter` — count *traces* (not
+  calls) of a jitted entry point and assert a budget: the EpochExecutor
+  window, the BatchingRecommender program, and ``topk_pruned`` must each
+  trace once after warmup, ever.
+* :func:`donation_report` / :func:`assert_donation` — verify donated
+  buffers are actually reused in place (XLA silently falls back to a copy
+  when aliasing fails), by comparing input/output buffer pointers.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+
+
+class RetraceError(AssertionError):
+    """A jitted entry point traced more often than its declared budget."""
+
+
+class DonationError(AssertionError):
+    """A donated buffer was copied instead of reused in place."""
+
+
+# ---------------------------------------------------------------------------
+# Retrace detection
+# ---------------------------------------------------------------------------
+
+class TraceCounter:
+    """Counts traces of the callables it wraps; optionally enforces a budget.
+
+    The counter increments from a python side effect inside the wrapped
+    function, so it fires exactly when JAX traces (first call per shape/
+    dtype/static-arg signature) and never on cached executions — the same
+    mechanism the PR-6 server counter used, packaged so every jitted entry
+    point can carry one.
+
+        counter = TraceCounter("serve", budget=1)
+        fn = jax.jit(counter.wrap(recommend))
+        fn(...)          # traces: count == 1
+        fn(...)          # cached: count == 1
+        counter.check()  # ok;  a retrace would raise RetraceError
+    """
+
+    def __init__(self, label: str = "jit", budget: Optional[int] = None):
+        self.label = label
+        self.budget = budget
+        self.count = 0
+
+    def wrap(self, fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def counted(*args, **kwargs):
+            self.count += 1     # trace-time python side effect
+            return fn(*args, **kwargs)
+        counted.trace_counter = self
+        return counted
+
+    def check(self, budget: Optional[int] = None) -> None:
+        budget = self.budget if budget is None else budget
+        if budget is not None and self.count > budget:
+            raise RetraceError(
+                f"'{self.label}' traced {self.count}x, budget {budget}: a "
+                "shape/dtype/weak-type drift is retracing the hot path — "
+                "every retrace recompiles and re-uploads constants")
+
+    def reset(self) -> None:
+        self.count = 0
+
+    def __repr__(self) -> str:
+        return (f"TraceCounter({self.label!r}, count={self.count}, "
+                f"budget={self.budget})")
+
+
+def trace_counter(fn: Callable, *, label: Optional[str] = None,
+                  budget: Optional[int] = None) -> Callable:
+    """Convenience wrapper: ``jit(trace_counter(f))`` gives the jitted entry
+    point a ``.trace_counter`` attribute (a :class:`TraceCounter`)."""
+    c = TraceCounter(label or getattr(fn, "__name__", "jit"), budget)
+    return c.wrap(fn)
+
+
+# ---------------------------------------------------------------------------
+# Donation verification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DonationReport:
+    """Which donated input buffers came back as output buffers."""
+    reused: int
+    copied: int
+    copied_bytes: int
+    details: list[tuple[str, int, bool]]    # (leaf path, nbytes, reused)
+
+    @property
+    def ok(self) -> bool:
+        return self.copied == 0
+
+    def __str__(self) -> str:
+        lines = [f"donation: {self.reused} reused, {self.copied} copied "
+                 f"({self.copied_bytes} bytes copied)"]
+        lines += [f"  {'reused' if r else 'COPIED'} {p} ({n} B)"
+                  for p, n, r in self.details if not r]
+        return "\n".join(lines)
+
+
+def _leaf_ptrs(tree: Any) -> dict[int, tuple[str, int]]:
+    out: dict[int, tuple[str, int]] = {}
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in leaves:
+        if isinstance(leaf, jax.Array):
+            try:
+                ptr = leaf.unsafe_buffer_pointer()
+            except Exception:       # sharded across >1 device: skip leaf
+                continue
+            out[ptr] = (jax.tree_util.keystr(path), leaf.nbytes)
+    return out
+
+
+def donation_report(fn: Callable, *args,
+                    donate_argnums: Iterable[int] = (0,),
+                    min_bytes: int = 0, **kwargs) -> DonationReport:
+    """Call ``fn(*args, **kwargs)`` (jitted with donation already declared)
+    and report whether each donated argument's buffers were reused by the
+    outputs.  The donated args are CONSUMED — do not touch them after.
+
+    ``min_bytes`` ignores tiny leaves (XLA may legitimately not alias a
+    scalar); the executor's carry tables are the buffers that matter.
+    """
+    donated = [args[i] for i in donate_argnums]
+    in_ptrs = _leaf_ptrs(donated)
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    out_ptrs = set(_leaf_ptrs(out))
+    details, reused, copied, copied_bytes = [], 0, 0, 0
+    for ptr, (path, nbytes) in sorted(in_ptrs.items(), key=lambda kv: kv[1][0]):
+        if nbytes < min_bytes:
+            continue
+        hit = ptr in out_ptrs
+        details.append((path, nbytes, hit))
+        if hit:
+            reused += 1
+        else:
+            copied += 1
+            copied_bytes += nbytes
+    return DonationReport(reused, copied, copied_bytes, details)
+
+
+def assert_donation(fn: Callable, *args,
+                    donate_argnums: Iterable[int] = (0,),
+                    min_bytes: int = 1 << 12, **kwargs):
+    """Like :func:`donation_report` but raises :class:`DonationError` when
+    any donated leaf of at least ``min_bytes`` was copied instead of reused.
+    Returns ``fn``'s output so the (consumed-input) call is not wasted."""
+    donated = [args[i] for i in donate_argnums]
+    in_ptrs = _leaf_ptrs(donated)
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    out_ptrs = set(_leaf_ptrs(out))
+    bad = [(path, nbytes) for ptr, (path, nbytes) in in_ptrs.items()
+           if nbytes >= min_bytes and ptr not in out_ptrs]
+    if bad:
+        listing = ", ".join(f"{p} ({n} B)" for p, n in sorted(bad))
+        raise DonationError(
+            f"donated buffers were copied, not reused: {listing} — check "
+            "that the donated argument's shapes/dtypes match an output "
+            "(donation falls back to a silent copy on any mismatch)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The sanitizer context
+# ---------------------------------------------------------------------------
+
+class Sanitizer:
+    """Handle yielded by :func:`sanitize`: hands out budgeted
+    :class:`TraceCounter`\\ s and checks them all on exit."""
+
+    def __init__(self, trace_budgets: Optional[dict[str, int]] = None):
+        self._budgets = dict(trace_budgets or {})
+        self.counters: dict[str, TraceCounter] = {}
+
+    def counter(self, label: str, budget: Optional[int] = None) -> TraceCounter:
+        if label not in self.counters:
+            self.counters[label] = TraceCounter(
+                label, self._budgets.get(label, budget))
+        return self.counters[label]
+
+    def adopt(self, label: str, counter: TraceCounter) -> TraceCounter:
+        """Track an externally owned counter (e.g. a server's) under this
+        sanitizer's exit check, applying any declared budget."""
+        if label in self._budgets:
+            counter.budget = self._budgets[label]
+        self.counters[label] = counter
+        return counter
+
+    def check(self) -> None:
+        for c in self.counters.values():
+            c.check()
+
+
+@contextlib.contextmanager
+def sanitize(*, transfer: Optional[str] = "disallow",
+             rank_promotion: Optional[str] = "raise",
+             debug_nans: bool = False,
+             trace_budgets: Optional[dict[str, int]] = None):
+    """Arm JAX's runtime sanitizers around a code region.
+
+    ``transfer``: a ``jax.transfer_guard`` level (``"disallow"`` — the
+    executor-window / serving-path setting — fails on any *implicit*
+    host<->device transfer; explicit ``jnp.asarray`` / ``device_get`` edge
+    syncs stay legal).  ``rank_promotion="raise"`` turns silent broadcast
+    rank promotion into an error.  ``debug_nans=True`` additionally traps
+    NaNs at the op that produced them (expensive: per-op checks).
+
+    Yields a :class:`Sanitizer`; its trace counters (``handle.counter`` /
+    ``handle.adopt``) are budget-checked on clean exit, so a retrace inside
+    the region fails the region even if nothing else noticed.
+
+    Discipline: warm up (trace + compile) *outside* the context, run steady
+    state *inside* — a clean pass proves the hot path does no hidden
+    per-call host traffic.
+
+    Caveat: ``rank_promotion`` participates in the jit trace-cache key
+    (it changes trace semantics), so entering it re-traces warm entry
+    points once — ``transfer_guard`` and ``debug_nans`` do not.  When a
+    region asserts trace budgets on pre-warmed functions, pass
+    ``rank_promotion=None`` (or warm up inside the same setting).
+    """
+    handle = Sanitizer(trace_budgets)
+    with contextlib.ExitStack() as stack:
+        if transfer is not None:
+            stack.enter_context(jax.transfer_guard(transfer))
+        if rank_promotion is not None:
+            stack.enter_context(jax.numpy_rank_promotion(rank_promotion))
+        if debug_nans:
+            stack.enter_context(jax.debug_nans(True))
+        yield handle
+        handle.check()

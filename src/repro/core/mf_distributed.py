@@ -126,7 +126,10 @@ def partitioned_batch(ds_sampler, step: int, global_batch: int,
     """Rating-matrix row partition: shard s draws users from its own range
     [s*U/S, (s+1)*U/S) so user-table access is shard-local."""
     import numpy as np
-    r = np.random.default_rng(hash((seed, step)) % (2 ** 63))
+    # SeedSequence consumes the (seed, step) tuple directly — a documented,
+    # process-stable derivation, unlike hash() (HL106: salted for strings,
+    # unspecified for tuples).
+    r = np.random.default_rng((seed, step))
     per = global_batch // num_shards
     rows = num_users // num_shards
     users = np.concatenate([

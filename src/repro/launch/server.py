@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitize import TraceCounter
 from repro.core import mf
 from repro.core import retrieval as rtv
 
@@ -75,13 +76,15 @@ class BatchingRecommender:
         self._similarity = similarity
         self._refresh_centroids = refresh_centroids
         self._exclude_mask = exclude_mask
-        self._traces = 0          # incremented per trace of the device call
+        # One padded shape -> ONE trace, ever: the shared retrace detector
+        # (repro.analysis) replaces PR 6's ad-hoc counter and arms a hard
+        # budget — any steady-state retrace is a bug, not a slowdown.
+        self.trace_counter = TraceCounter("batching_recommender", budget=1)
         self._device_calls = 0
         self._requests_served = 0
 
         def _recommend(params: mf.MFParams, index: Optional[rtv.RetrievalIndex],
                        user_ids: jax.Array) -> jax.Array:
-            self._traces += 1     # runs at trace time only (python side effect)
             excl = (None if exclude_mask is None
                     else exclude_mask[user_ids])
             if pruner == "tile":
@@ -94,7 +97,7 @@ class BatchingRecommender:
                                      item_chunk=item_chunk,
                                      exclude_mask=excl)
 
-        self._fn = jax.jit(_recommend)
+        self._fn = jax.jit(self.trace_counter.wrap(_recommend))
         self._params = state.params
         self._index = (rtv.refresh_index(index, state.params.item_table,
                                          similarity=similarity)
@@ -113,6 +116,7 @@ class BatchingRecommender:
     def _call(self, user_ids: jax.Array) -> np.ndarray:
         out = self._fn(self._params, self._index, user_ids)
         self._device_calls += 1
+        self.trace_counter.check()      # steady-state retrace = hard failure
         return np.asarray(jax.block_until_ready(out))
 
     def warmup(self) -> float:
@@ -125,13 +129,13 @@ class BatchingRecommender:
 
     @property
     def trace_count(self) -> int:
-        return self._traces
+        return self.trace_counter.count
 
     @property
     def stats(self) -> dict:
         return {"device_calls": self._device_calls,
                 "requests_served": self._requests_served,
-                "traces": self._traces}
+                "traces": self.trace_counter.count}
 
     def recommend_many(self, user_ids) -> np.ndarray:
         """Synchronous batched entry point (bench/offline use): pads the

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitize import TraceCounter
 from repro.core import mf, samplers
 from repro.core import mf_distributed as mfd
 from repro.core.engine import StepEngine, resolve_engine
@@ -145,14 +146,24 @@ class EpochExecutor:
     *and* out, so the sharded state is donated window-to-window with zero
     resharding, and the per-window loss array lands replicated
     (``scalar_sharding``) for the edge sync.
+
+    Every window trace increments ``trace_counter``
+    (:class:`repro.analysis.sanitize.TraceCounter`): a steady-state run
+    traces once per *distinct window length* and never again, so
+    ``trace_counter.check(budget)`` turns a silent recompile-per-dispatch
+    regression into a hard failure (``trace_budget`` arms the check on the
+    counter itself).
     """
 
     def __init__(self, body: Callable, steps_per_dispatch: int, *,
-                 state_shardings=None, scalar_sharding=None):
+                 state_shardings=None, scalar_sharding=None,
+                 trace_budget: Optional[int] = None):
         self.body = body
         self.steps_per_dispatch = max(int(steps_per_dispatch), 1)
         self.state_shardings = state_shardings
         self.scalar_sharding = scalar_sharding
+        self.trace_counter = TraceCounter("epoch_executor.window",
+                                          trace_budget)
         self._windows: dict[int, Callable] = {}
 
     def _compiled(self, length: int) -> Callable:
@@ -167,15 +178,20 @@ class EpochExecutor:
                     in_shardings=(self.state_shardings, self.scalar_sharding),
                     out_shardings=(self.state_shardings,
                                    self.scalar_sharding))
-            fn = jax.jit(run_window, donate_argnums=(0,), **kw)
+            fn = jax.jit(self.trace_counter.wrap(run_window),
+                         donate_argnums=(0,), **kw)
             self._windows[length] = fn
         return fn
 
     def run(self, state, start: int, length: int):
         """Dispatch one [start, start+length) window; returns
         (new_state, (length,) device loss array) — the only sync the driver
-        does is reading that array back at the window edge."""
-        return self._compiled(length)(state, jnp.asarray(start, jnp.int32))
+        does is reading that array back at the window edge.
+
+        The start index goes up via ``jax.device_put`` (an *explicit*
+        transfer): ``jnp.asarray(start)`` counts as implicit and would trip
+        ``repro.analysis.sanitize``'s transfer guard on every dispatch."""
+        return self._compiled(length)(state, jax.device_put(np.int32(start)))
 
 
 def _window_length(step: int, stop: int, k: int, ckpt_every: int,
@@ -295,7 +311,8 @@ def train_lm(cfg: ArchConfig, opts: lm.TrainOptions, tcfg: TrainerConfig,
                                       jax.random.fold_in(rng, step))
                 losses.append(loss)                # device scalar — no sync
                 if tcfg.log_every and step % tcfg.log_every == 0:
-                    log(f"[trainer] step {step} loss {float(loss):.4f}")
+                    log(f"[trainer] step {step} loss "
+                        f"{float(loss):.4f}")  # heatlint: disable=HL107 -- log_every-gated readback, not per-step
                 step += 1
             if tcfg.ckpt_dir and step % tcfg.ckpt_every == 0:
                 ckpt.save(tcfg.ckpt_dir, step, state)
@@ -426,7 +443,7 @@ def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
                                               cfg.history_len, seed)
                     state, loss = step_fn(state, batch,
                                           jax.random.fold_in(rng, step))
-                    losses.append(float(loss))
+                    losses.append(loss)        # device scalar — no sync
                     step += 1
                 if ckpt_dir and step % ckpt_every == 0:
                     ckpt.save(ckpt_dir, step, state)
@@ -440,4 +457,7 @@ def train_mf(cfg: mf.MFConfig, ds: pipeline.CFDataset, steps: int, *,
                                                   shardings=state_shardings)
                 else:       # failed before the first checkpoint: start over
                     state, step = init_state(), 0
+    if losses and not isinstance(losses[0], float):
+        # per-step path: one bulk readback instead of a float() per step
+        losses = np.asarray(jnp.stack(losses)).tolist()
     return state, losses

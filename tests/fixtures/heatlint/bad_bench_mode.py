@@ -1,0 +1,15 @@
+"""heatlint fixture: HL105 — bench artifact rows without an execution-mode
+label.  Path-scoped rule: tests lint this source with a benchmarks/ relpath.
+
+Intentionally bad; never executed.
+"""
+
+
+def record(name, us, derived, **extra):
+    return {"name": name, "us_per_call": us, "derived": derived, **extra}
+
+
+def run(rows):
+    rows.append({"name": "fig6/baseline", "us_per_call": 12.0})  # HL105
+    record("fig6/heat", 4.0, "speedup=3.0x")                     # HL105
+    return rows

@@ -1,0 +1,15 @@
+"""heatlint fixture: HL102 — host sync on a traced value inside a scan body.
+
+Intentionally bad; linted explicitly by tests, never executed.
+"""
+import jax
+import numpy as np
+
+
+def window(state, steps):
+    def body(carry, step):
+        carry = carry + step
+        loss = float(carry)             # HL102: concretizes at trace time
+        host = np.asarray(carry)        # HL102: device->host round trip
+        return carry, loss + host.sum()
+    return jax.lax.scan(body, state, steps)

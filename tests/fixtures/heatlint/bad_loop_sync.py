@@ -1,0 +1,15 @@
+"""heatlint fixture: HL107 — per-iteration host sync on a loop-computed
+device value.  Rule skips tests/; tests lint this source with a src/ relpath.
+
+Intentionally bad; never executed.
+"""
+
+
+def train(step_fn, state, batches):
+    total = 0.0
+    for batch in batches:
+        state, loss = step_fn(state, batch)
+        total += float(loss)            # HL107: blocks the host every step
+        _state2, metric = step_fn(state, batch)
+        total += metric.item()          # HL107: same, via .item()
+    return state, total

@@ -1,0 +1,26 @@
+"""heatlint fixture: HL104 — pallas_call grids that silently drop rows.
+
+Intentionally bad; linted explicitly by tests, never executed.
+"""
+import jax
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x, rows, block):
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block,),          # HL104: remainder rows dropped
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def launch_static(x):
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(100, 8),),        # HL104: 100 % 8 != 0, partial block
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,10 @@
+"""heatlint fixture: HL106 — hash() in library code.  Path-scoped rule:
+tests lint this source with a src/ relpath.
+
+Intentionally bad; never executed.
+"""
+import numpy as np
+
+
+def batch_rng(seed, step):
+    return np.random.default_rng(hash((seed, step)) % (2 ** 63))  # HL106

@@ -1,0 +1,28 @@
+"""heatlint fixture: HL101 — python RNG / hash() / id() inside traced code.
+
+Intentionally bad.  Excluded from directory walks (DEFAULT_EXCLUDES); the CLI
+negative test lints this file explicitly and must exit non-zero.
+"""
+import random
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def traced_hash(x):
+    return x + hash("salt")             # HL101: trace-time, process-salted
+
+
+@jax.jit
+def traced_python_rng(x):
+    return x * random.random()          # HL101: baked into the program
+
+
+def scan_body_rng(carry, step):
+    noise = np.random.normal()          # HL101: numpy RNG, trace-time const
+    return carry + noise, step
+
+
+def window(state, steps):
+    return jax.lax.scan(scan_body_rng, state, steps)

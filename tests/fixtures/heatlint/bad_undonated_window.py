@@ -1,0 +1,22 @@
+"""heatlint fixture: HL103 — jitted scan windows that never declare donation.
+
+Intentionally bad; linted explicitly by tests, never executed.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def step(state, i):
+    return state + i, jnp.float32(0.0)
+
+
+@jax.jit                                # HL103: decorator form cannot donate
+def decorated_window(state, steps):
+    return jax.lax.scan(step, state, steps)
+
+
+def call_form_window(state, steps):
+    return jax.lax.scan(step, state, steps)
+
+
+compiled = jax.jit(call_form_window)    # HL103: no donate_argnums

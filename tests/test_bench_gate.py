@@ -1,0 +1,103 @@
+"""benchmarks/check.py serving-artifact schema gate: a well-formed
+BENCH_serving.json passes, and each class of malformation (missing file,
+missing config key, missing row key, unlabeled / mislabeled mode, absent
+default-budget row) is named in the problem list."""
+import copy
+import json
+
+import pytest
+
+from benchmarks.check import serving_problems
+
+VALID = {
+    "config": {"num_items": 1000, "num_users": 64, "emb_dim": 16,
+               "topk": 10, "tile_rows": 128, "num_tiles": 8,
+               "default_expand_tiles": 4, "recall_gate": 0.95,
+               "parity_gate": 0.99, "batching_gate": 2.0},
+    "jax_backend": "cpu",
+    "rows": [
+        {"name": "serve/exact/B=1", "us_per_call": 120.0,
+         "derived": "p50_ms=0.12", "mode": "native", "batch": 1,
+         "path": "exact", "p50_us": 120.0, "p99_us": 150.0, "qps": 8000.0},
+        {"name": "serve/exact/batching", "us_per_call": 0.0,
+         "derived": "qps_B32_over_B1=3.1x", "mode": "native",
+         "path": "exact", "batching_speedup": 3.1},
+        {"name": "serve/pruned/B=32/T=4", "us_per_call": 90.0,
+         "derived": "recall@10=0.97", "mode": "native", "batch": 32,
+         "path": "pruned", "expand_tiles": 4, "recall": 0.97,
+         "p50_us": 90.0, "p99_us": 130.0, "default_budget": True},
+    ],
+}
+
+
+@pytest.fixture
+def artifact(tmp_path):
+    def write(payload):
+        p = tmp_path / "BENCH_serving.json"
+        p.write_text(json.dumps(payload))
+        return str(p)
+    return write
+
+
+def test_valid_artifact_passes(artifact):
+    assert serving_problems(artifact(VALID)) == []
+
+
+def test_missing_file_is_a_problem(tmp_path):
+    probs = serving_problems(str(tmp_path / "nope.json"))
+    assert len(probs) == 1 and "never written" in probs[0]
+
+
+def test_missing_config_key_fails(artifact):
+    bad = copy.deepcopy(VALID)
+    del bad["config"]["recall_gate"]
+    assert any("recall_gate" in p for p in serving_problems(artifact(bad)))
+
+
+def test_row_without_mode_fails(artifact):
+    bad = copy.deepcopy(VALID)
+    del bad["rows"][0]["mode"]
+    assert any("'mode'" in p for p in serving_problems(artifact(bad)))
+
+
+def test_non_native_serving_mode_fails(artifact):
+    bad = copy.deepcopy(VALID)
+    bad["rows"][2]["mode"] = "interpret"
+    probs = serving_problems(artifact(bad))
+    assert any("must be mode='native'" in p for p in probs)
+    bad["rows"][2]["mode"] = "warp-speed"        # not even in the vocabulary
+    assert any("not in" in p for p in serving_problems(artifact(bad)))
+
+
+def test_missing_row_key_and_wrong_type_fail(artifact):
+    bad = copy.deepcopy(VALID)
+    del bad["rows"][2]["recall"]
+    assert any("'recall'" in p for p in serving_problems(artifact(bad)))
+    bad = copy.deepcopy(VALID)
+    bad["rows"][0]["qps"] = "fast"
+    assert any("'qps'" in p for p in serving_problems(artifact(bad)))
+
+
+def test_unknown_row_family_fails(artifact):
+    bad = copy.deepcopy(VALID)
+    bad["rows"][0]["name"] = "train/step"
+    assert any("unrecognized row family" in p
+               for p in serving_problems(artifact(bad)))
+
+
+def test_pruned_rows_need_a_default_budget_row(artifact):
+    bad = copy.deepcopy(VALID)
+    bad["rows"][2]["default_budget"] = False
+    assert any("default_budget" in p for p in serving_problems(artifact(bad)))
+
+
+def test_recall_out_of_range_fails(artifact):
+    bad = copy.deepcopy(VALID)
+    bad["rows"][2]["recall"] = 1.7
+    assert any("outside [0, 1]" in p for p in serving_problems(artifact(bad)))
+
+
+def test_empty_rows_fail(artifact):
+    bad = copy.deepcopy(VALID)
+    bad["rows"] = []
+    assert any("no rows" in p for p in serving_problems(artifact(bad)))

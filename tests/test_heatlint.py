@@ -1,0 +1,203 @@
+"""heatlint (repro.analysis.rules + tools/heatlint.py): every rule fires on
+its bad fixture, stays quiet on the clean one, respects disable comments,
+and the CLI exits non-zero on a seeded violation / zero on the real tree."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import RULES, lint_file, lint_paths, lint_source
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "heatlint")
+HEATLINT = os.path.join(REPO, "tools", "heatlint.py")
+
+
+def _codes(violations):
+    return sorted({v.code for v in violations})
+
+
+def _lint_fixture(name, relpath=None):
+    path = os.path.join(FIXTURES, name)
+    with open(path) as f:
+        src = f.read()
+    return lint_source(src, path, relpath=relpath or name)
+
+
+# ---------------------------------------------------------------------------
+# Per-rule fixtures: each bad_* file trips exactly its rule
+# ---------------------------------------------------------------------------
+
+def test_hl101_traced_python_rng():
+    v = _lint_fixture("bad_traced_rng.py")
+    assert _codes(v) == ["HL101"]
+    assert len(v) == 3          # hash(), random.random(), np.random.normal()
+
+
+def test_hl102_host_sync_in_scan_body():
+    v = _lint_fixture("bad_host_sync.py")
+    assert _codes(v) == ["HL102"]
+    assert len(v) == 2          # float() and np.asarray()
+
+
+def test_hl103_undonated_windows():
+    v = _lint_fixture("bad_undonated_window.py")
+    assert _codes(v) == ["HL103"]
+    assert len(v) == 2          # decorator form and call form
+
+
+def test_hl104_pallas_grid_drops_rows():
+    v = _lint_fixture("bad_pallas_grid.py")
+    assert _codes(v) == ["HL104"]
+    assert len(v) == 2          # rows // block and cdiv(100, 8)
+
+
+def test_hl105_bench_rows_need_mode_label():
+    # path-scoped: only fires under benchmarks/
+    v = _lint_fixture("bad_bench_mode.py",
+                      relpath="benchmarks/bad_bench_mode.py")
+    assert _codes(v) == ["HL105"]
+    assert len(v) == 2          # rows.append({...}) and record(...)
+    assert _lint_fixture("bad_bench_mode.py",
+                         relpath="tests/bad_bench_mode.py") == []
+
+
+def test_hl106_salted_hash_in_library_code():
+    # path-scoped: only fires under src/
+    v = _lint_fixture("bad_salted_hash.py",
+                      relpath="src/repro/bad_salted_hash.py")
+    assert _codes(v) == ["HL106"]
+    assert _lint_fixture("bad_salted_hash.py",
+                         relpath="benchmarks/bad_salted_hash.py") == []
+
+
+def test_hl107_per_iteration_host_sync():
+    # fires everywhere except tests/
+    v = _lint_fixture("bad_loop_sync.py",
+                      relpath="src/repro/bad_loop_sync.py")
+    assert _codes(v) == ["HL107"]
+    assert len(v) == 2          # float(loss) and metric.item()
+    assert _lint_fixture("bad_loop_sync.py",
+                         relpath="tests/bad_loop_sync.py") == []
+
+
+def test_clean_fixture_is_clean_under_every_scope():
+    for rel in ("src/repro/clean_ok.py", "benchmarks/clean_ok.py",
+                "examples/clean_ok.py"):
+        assert _lint_fixture("clean_ok.py", relpath=rel) == []
+
+
+# ---------------------------------------------------------------------------
+# Mechanics: suppression, alias resolution, traced-region detection
+# ---------------------------------------------------------------------------
+
+def test_disable_comment_suppresses_on_line_def_and_file():
+    bad = textwrap.dedent("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x + hash("s")
+    """)
+    assert _codes(lint_source(bad)) == ["HL101"]
+    line = bad.replace('hash("s")',
+                       'hash("s")  # heatlint: disable=HL101 -- why')
+    assert lint_source(line) == []
+    block = bad.replace("def f(x):",
+                        "def f(x):  # heatlint: disable=ALL -- why")
+    assert lint_source(block) == []
+    whole = "# heatlint: disable-file=HL101\n" + bad
+    assert lint_source(whole) == []
+
+
+def test_disable_comment_only_suppresses_named_rule():
+    src = textwrap.dedent("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x + hash("s")  # heatlint: disable=HL102 -- wrong code
+    """)
+    assert _codes(lint_source(src)) == ["HL101"]
+
+
+def test_alias_resolution_sees_through_import_renames():
+    src = textwrap.dedent("""\
+        from jax import jit as J
+        from jax.lax import scan
+
+        def body(c, x):
+            return c, x
+
+        def window(state, xs):
+            return scan(body, state, xs)
+
+        compiled = J(window)
+    """)
+    assert _codes(lint_source(src)) == ["HL103"]
+
+
+def test_untraced_code_is_not_flagged():
+    src = textwrap.dedent("""\
+        import random
+
+        def host_only(n):
+            return [random.random() for _ in range(n)]
+    """)
+    assert lint_source(src) == []
+
+
+def test_syntax_error_reports_hl000():
+    v = lint_source("def broken(:\n    pass\n")
+    assert [x.code for x in v] == ["HL000"]
+
+
+def test_every_rule_has_summary_and_rationale():
+    for code, (summary, rationale) in RULES.items():
+        assert summary and rationale, code
+
+
+def test_walks_skip_fixtures_but_explicit_files_lint():
+    assert lint_paths([os.path.join(REPO, "tests")], root=REPO) == []
+    path = os.path.join(FIXTURES, "bad_traced_rng.py")
+    assert _codes(lint_file(path, root=REPO)) == ["HL101"]
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI contract (exit 0 on the tree, non-zero on a seeded violation)
+# ---------------------------------------------------------------------------
+
+def _cli(*args):
+    return subprocess.run([sys.executable, HEATLINT, *args], cwd=REPO,
+                          capture_output=True, text=True)
+
+def test_cli_clean_on_the_real_tree():
+    r = _cli("src", "tests", "benchmarks", "examples")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_fails_on_seeded_violation():
+    r = _cli(os.path.join("tests", "fixtures", "heatlint",
+                          "bad_traced_rng.py"))
+    assert r.returncode == 1
+    assert "HL101" in r.stdout
+
+
+def test_cli_list_rules_and_explain():
+    r = _cli("--list-rules")
+    assert r.returncode == 0
+    for code in RULES:
+        assert code in r.stdout
+    r = _cli("--explain", "HL104")
+    assert r.returncode == 0 and "HL104" in r.stdout
+
+
+def test_cli_usage_error_exit_code():
+    r = _cli("--explain", "HL999")
+    assert r.returncode == 2
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import trace_counter
 from repro.core import mf, retrieval
 
 NUM_USERS, NUM_ITEMS, DIM = 64, 500, 16   # 500 % 128 != 0: padded last tile
@@ -156,17 +157,16 @@ def test_build_refresh_agree_on_fresh_table():
 def test_topk_pruned_is_jittable_and_shape_stable():
     params = _params()
     idx = retrieval.build_retrieval_index(params.item_table, tile_rows=128)
-    traces = []
 
-    @jax.jit
-    def f(p, i, uids):
-        traces.append(1)
-        return retrieval.topk_pruned(p, uids, 10, i, expand_tiles=2)
-
+    counted = trace_counter(
+        lambda p, i, uids: retrieval.topk_pruned(p, uids, 10, i,
+                                                 expand_tiles=2),
+        label="topk_pruned", budget=1)
+    f = jax.jit(counted)
     a = f(params, idx, jnp.arange(8))
     b = f(params, idx, jnp.arange(8, 16))    # same shape, new values
     assert a.shape == b.shape == (8, 10)
-    assert len(traces) == 1                  # one compiled program
+    counted.trace_counter.check()            # one compiled program
 
 
 def test_bad_args_raise():

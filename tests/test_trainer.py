@@ -152,6 +152,31 @@ def test_mf_executor_matches_per_step_loop():
     np.testing.assert_array_equal(np.float32(l1), np.float32(l2))
 
 
+def test_mf_executor_trace_budget():
+    """The executor's shared TraceCounter (repro.analysis) counts one trace
+    per distinct window length — re-dispatching a cached length never
+    retraces — and check() turns a budget overrun into RetraceError."""
+    from repro.analysis import RetraceError
+    from repro.core import mf
+    ds = pipeline.synth_cf_dataset(40, 60, interactions_per_user=8)
+    cfg = MFConfig(num_users=40, num_items=60, emb_dim=8, num_negatives=4,
+                   lr=0.05)
+    dds = pipeline.device_cf_dataset(ds)
+    body = mf.make_scan_body(
+        cfg, lambda s: pipeline.cf_batch_device(dds, 0, s, 8,
+                                                cfg.history_len), 0)
+    executor = trainer.EpochExecutor(body, 4, trace_budget=1)
+    state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    state, _ = executor.run(state, 0, 4)
+    state, _ = executor.run(state, 4, 4)      # cached window: no retrace
+    executor.trace_counter.check()            # count == budget == 1
+    assert executor.trace_counter.count == 1
+    state, _ = executor.run(state, 8, 2)      # truncated window: new length
+    assert executor.trace_counter.count == 2  # legitimately traced again
+    with pytest.raises(RetraceError):
+        executor.trace_counter.check()        # ...but over the budget of 1
+
+
 @pytest.mark.parametrize("backend", ["fused", "autodiff", "pallas"])
 @pytest.mark.parametrize("sampler", ["tile", "popularity"])
 def test_mf_scan_carry_parity(backend, sampler):

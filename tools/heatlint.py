@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""heatlint CLI — run the repo's JAX-hazard AST lint over source trees.
+
+    python tools/heatlint.py src tests benchmarks examples
+    python tools/heatlint.py --list-rules
+    python tools/heatlint.py --explain HL103
+    python tools/heatlint.py path/to/one_file.py
+
+Exit status: 0 when clean, 1 when any violation is found, 2 on usage error.
+
+Directory walks skip ``tests/fixtures/heatlint`` (intentionally-bad rule
+fixtures); passing a file path explicitly always lints it — that is how the
+CI negative test seeds a violation and asserts a non-zero exit.
+
+The rule engine lives in ``src/repro/analysis/rules.py`` and is pure stdlib;
+it is loaded straight from that file so the CLI needs no jax runtime and no
+installed package.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_RULES_PATH = os.path.join(_REPO_ROOT, "src", "repro", "analysis", "rules.py")
+
+
+def _load_rules():
+    """Load the rules module without importing the repro package (whose
+    __init__ pulls in jax)."""
+    spec = importlib.util.spec_from_file_location("heatlint_rules", _RULES_PATH)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod    # dataclasses resolve through sys.modules
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="heatlint",
+        description="JAX-hazard static analysis for the HEAT repro tree")
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print every rule code + summary and exit")
+    ap.add_argument("--explain", metavar="CODE",
+                    help="print the full rationale for one rule and exit")
+    ap.add_argument("--include-fixtures", action="store_true",
+                    help="also lint tests/fixtures/heatlint during walks "
+                         "(default: skipped; explicit file args always lint)")
+    args = ap.parse_args(argv)
+
+    rules = _load_rules()
+
+    if args.list_rules:
+        for code, (summary, _) in sorted(rules.RULES.items()):
+            print(f"{code}  {summary}")
+        return 0
+    if args.explain:
+        code = args.explain.upper()
+        if code not in rules.RULES:
+            print(f"heatlint: unknown rule {code!r} "
+                  f"(known: {', '.join(sorted(rules.RULES))})", file=sys.stderr)
+            return 2
+        summary, rationale = rules.RULES[code]
+        print(f"{code}: {summary}\n\n{rationale}\n")
+        print("Suppress with a justification:  "
+              f"# heatlint: disable={code} -- <why this site is safe>")
+        return 0
+    if not args.paths:
+        ap.print_usage(sys.stderr)
+        print("heatlint: no paths given", file=sys.stderr)
+        return 2
+
+    missing = [p for p in args.paths if not os.path.exists(p)]
+    if missing:
+        print(f"heatlint: no such path: {', '.join(missing)}", file=sys.stderr)
+        return 2
+
+    excludes = () if args.include_fixtures else rules.DEFAULT_EXCLUDES
+    violations = rules.lint_paths(args.paths, root=os.getcwd(),
+                                  excludes=excludes)
+    for v in violations:
+        print(v.format())
+    nfiles = sum(1 for _ in rules.iter_python_files(args.paths, excludes))
+    if violations:
+        codes = sorted({v.code for v in violations})
+        print(f"heatlint: {len(violations)} violation(s) "
+              f"[{', '.join(codes)}] in {nfiles} file(s) — "
+              "see --explain CODE; suppress with "
+              "'# heatlint: disable=CODE -- reason'", file=sys.stderr)
+        return 1
+    print(f"heatlint: {nfiles} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
