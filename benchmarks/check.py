@@ -21,6 +21,12 @@ write (paths overridable via ``BENCH_RUN_JSON`` / ``BENCH_BACKENDS_JSON``):
     mode-labeled ``native`` (the serving path is plain jitted XLA — heatlint
     HL105 enforces the label statically, this gate on the shipped artifact),
     and the pruned sweep includes its ``default_budget`` gate row;
+  * the streaming suite ran (``stream/`` rows present) and
+    BENCH_streaming.json (path overridable via ``BENCH_STREAMING_JSON``) is
+    schema-valid: config complete, the ingest-throughput and freshness-SLO
+    rows present and fully keyed, every row mode-labeled ``native``, no
+    FRESHNESS flag (probes served within the SLO window), and the
+    steady-state loop inside its trace budgets;
   * BENCH_backends.json has at least one ``mf``-layout and one ``head``-layout
     row for every *registered* loss backend — a partial file (a backend
     silently skipped) fails instead of shipping;
@@ -42,6 +48,7 @@ import sys
 RUN_JSON = os.environ.get("BENCH_RUN_JSON", "BENCH_run.json")
 BACKENDS_JSON = os.environ.get("BENCH_BACKENDS_JSON", "BENCH_backends.json")
 SERVING_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+STREAMING_JSON = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
 
 #: the execution-mode vocabulary every artifact row must label itself with
 #: (heatlint HL105 enforces the label statically; this gate enforces it on
@@ -87,6 +94,17 @@ def run_problems(path: str = RUN_JSON) -> list[str]:
                    if flag in r.get("derived", "")]
             if hit:
                 problems.append(f"serving rows flagged {flag}: {hit}")
+    streaming = run["suites"].get("streaming(freshness)")
+    if streaming is None:
+        problems.append(
+            "streaming suite missing from BENCH_run.json — the freshness "
+            "SLO shipped unmeasured (benchmarks.run must include "
+            "bench_streaming.run)")
+    elif streaming["status"] == "ok":
+        stream_rows = [r for r in streaming["rows"]
+                       if r.get("name", "").startswith("stream/")]
+        if not stream_rows:
+            problems.append("streaming suite ran but emitted no stream/ rows")
     return problems
 
 
@@ -223,14 +241,106 @@ def serving_problems(path: str = SERVING_JSON) -> list[str]:
     return problems
 
 
+# ---------------------------------------------------------------------------
+# BENCH_streaming.json schema
+# ---------------------------------------------------------------------------
+
+#: required keys (key -> type) shared by every streaming row
+_STREAMING_ROW_BASE = {"name": str, "us_per_call": _NUM, "derived": str,
+                       "mode": str}
+#: additional required keys per row family (matched by exact name)
+_STREAMING_ROW_KINDS = {
+    "stream/ingest": {"events": int, "events_per_sec": _NUM},
+    "stream/train": {"steps": int, "steps_per_sec": _NUM},
+    "stream/round": {"rounds": int, "round_ms": _NUM, "window_traces": int,
+                     "serve_traces": int},
+    "stream/freshness": {"probes": int, "served": int, "fresh_frac": _NUM,
+                         "p50_ms": _NUM, "p95_ms": _NUM,
+                         "max_fresh_rounds": int},
+}
+_STREAMING_CONFIG_KEYS = ("num_users", "num_items", "emb_dim", "capacity",
+                          "micro_batch", "steps_per_round", "topk",
+                          "fresh_gate", "max_fresh_rounds")
+
+
+def streaming_problems(path: str = STREAMING_JSON) -> list[str]:
+    """Schema-validate the standalone streaming artifact
+    (bench_streaming.py): config complete, the ingest-throughput and
+    freshness-SLO rows *present* (a file without them shipped the service
+    unmeasured), every row fully keyed for its family and mode-labeled
+    ``native``, no FRESHNESS flag, and the steady-state loop inside its
+    trace budgets (one window program, one serving program)."""
+    if not os.path.exists(path):
+        return [f"{path} was never written — bench_streaming did not run"]
+    with open(path) as f:
+        payload = json.load(f)
+    problems = []
+    config = payload.get("config", {})
+    for key in _STREAMING_CONFIG_KEYS:
+        if key not in config:
+            problems.append(f"{path} config is missing {key!r}")
+    rows = payload.get("rows", [])
+    if not rows:
+        problems.append(f"{path} has no rows")
+    names = {str(r.get("name", "")) for r in rows}
+    for required in ("stream/ingest", "stream/freshness"):
+        if required not in names:
+            problems.append(
+                f"{path} is missing its {required!r} row — the "
+                f"{'ingest throughput' if 'ingest' in required else 'freshness SLO'}"
+                " shipped unmeasured")
+    for i, row in enumerate(rows):
+        name = str(row.get("name", ""))
+        who = f"{path} row {i} ({name!r})"
+        spec = dict(_STREAMING_ROW_BASE)
+        extra = _STREAMING_ROW_KINDS.get(name)
+        if extra is None:
+            problems.append(f"{who}: unrecognized row family (expected one "
+                            f"of {sorted(_STREAMING_ROW_KINDS)})")
+        else:
+            spec.update(extra)
+        for key, types in sorted(spec.items()):
+            if key not in row:
+                problems.append(f"{who}: missing required key {key!r}")
+            elif not _typed(row[key], types):
+                problems.append(f"{who}: key {key!r} has "
+                                f"{type(row[key]).__name__} value "
+                                f"{row[key]!r}, expected {types}")
+        mode = row.get("mode")
+        if mode is not None and mode not in MODES:
+            problems.append(f"{who}: mode={mode!r} not in {MODES}")
+        elif mode is not None and mode != "native":
+            # the service loop is plain jitted XLA — no pallas on the path
+            problems.append(f"{who}: streaming rows must be mode='native' "
+                            f"(plain jitted XLA), got {mode!r}")
+        if "FRESHNESS" in str(row.get("derived", "")):
+            problems.append(f"{who}: flagged FRESHNESS — fewer than "
+                            f"{config.get('fresh_gate')!r} of the probes "
+                            "were served within the SLO window")
+        ff = row.get("fresh_frac")
+        if isinstance(ff, _NUM) and not isinstance(ff, bool) \
+                and not 0.0 <= ff <= 1.0:
+            problems.append(f"{who}: fresh_frac={ff!r} outside [0, 1]")
+        if name == "stream/round":
+            for key in ("window_traces", "serve_traces"):
+                n = row.get(key)
+                if isinstance(n, int) and not isinstance(n, bool) and n > 1:
+                    problems.append(
+                        f"{who}: {key}={n} — the steady-state loop retraced "
+                        "(budget is ONE compiled program across all rounds)")
+    return problems
+
+
 def main() -> int:
-    problems = run_problems() + backends_problems() + serving_problems()
+    problems = (run_problems() + backends_problems() + serving_problems()
+                + streaming_problems())
     for p in problems:
         print(f"bench-gate: {p}", file=sys.stderr)
     if problems:
         return 1
     print("bench-gate: all suites ok, loop/ rows regression-free, shard/ "
           "rows present, serve/ rows present, schema-valid and unflagged, "
+          "stream/ rows present with the freshness SLO inside its gate, "
           "backends matrix complete and mode-labeled")
     return 0
 

@@ -19,7 +19,8 @@ it can lint fixture files that would not even import.
 
 Traced-region detection
 -----------------------
-Rules HL101/HL102 only apply *inside traced code*: a function is considered
+Rules HL101/HL102/HL108 only apply *inside traced code*: a function is
+considered
 traced when it (a) carries a transform decorator (``@jax.jit``,
 ``@partial(jax.jit, ...)``), (b) is passed by name or as a lambda into a
 transform call (``jax.jit(f)``, ``jax.lax.scan(body, ...)``,
@@ -96,6 +97,25 @@ RULES: dict[str, tuple[str, str]] = {
         "every device call — the per-step dispatch stall of §3.1 that the "
         "K-step executor removes.  Accumulate device scalars and read them "
         "back in bulk at the window edge (one sync per window)."),
+    "HL108": (
+        "no wall-clock reads in traced code",
+        "time.time() / time.monotonic() / perf_counter / datetime.now() "
+        "inside jit/scan run ONCE, at trace time: the compiled program "
+        "replays a frozen timestamp forever, so a 'recency' weight or "
+        "freshness stamp computed from it silently goes stale — and a "
+        "recompile makes results depend on *when* tracing happened, "
+        "breaking bit-exact replay (the streaming service's resume "
+        "contract).  Clock on the host at dispatch edges and pass times "
+        "in as array arguments (stream/sources.py ships event times "
+        "this way)."),
+}
+
+#: wall-clock entry points flagged by HL108 when called in traced code.
+_CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "datetime.date.today",
 }
 
 # Transform entry points whose function-valued arguments are traced.
@@ -325,6 +345,12 @@ class ModuleLinter:
             self._report("HL102", node,
                          ".item() inside traced code syncs per step; keep "
                          "device scalars and bulk-read at the edge")
+        if q in _CLOCK_CALLS:
+            self._report("HL108", node,
+                         f"{q}() in traced code is read once at trace time "
+                         "and frozen into the compiled program — clock on "
+                         "the host at the dispatch edge and pass timestamps "
+                         "in as array arguments")
 
     # HL103 -----------------------------------------------------------------
 

@@ -20,6 +20,15 @@ scanned executor produce the same trajectory.
 CF generator: power-law item popularity + per-user preference clusters so
 that embeddings are learnable (recall rises above the random baseline within
 a few hundred steps — exercised by benchmarks/bench_accuracy.py).
+
+Streaming (src/repro/stream/): the device dataset doubles as *incremental*
+state.  :func:`stream_ring_dataset` lays each user's positives out as a
+fixed-capacity ring, :meth:`DeviceCFDataset.apply_events` folds a micro-batch
+of live (user, item) events into it **on device** (append/evict rows, update
+popularity counts — no table re-upload, one trace per event-batch shape), and
+:func:`stream_batch_device` samples training batches recency-weighted over
+the ring.  ``DeviceCFDataset`` is a registered pytree so it can ride the
+``EpochExecutor``'s scanned carry and the checkpoint machinery.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitize import TraceCounter
 from repro.core.mf import Batch
 
 
@@ -96,25 +106,151 @@ class DeviceCFDataset:
     copies from the host; ``item_weights`` holds the empirical interaction
     counts (the ``popularity`` sampler's natural weights) as a device array
     for the same reason.  Static ints stay Python ints — they size the
-    compiled program, they are not traced."""
+    compiled program, they are not traced.
+
+    Streaming views (:func:`stream_ring_dataset`) additionally carry ring
+    state — ``row_count`` (valid rows per user, saturating at the column
+    capacity) and ``write_pos`` (next slot to write, mod capacity) — so
+    :meth:`apply_events` can append/evict in place.  Offline views leave
+    them ``None``.  The class is a registered pytree (array fields are
+    leaves, the sizing ints are static metadata), so a streaming view
+    threads through scanned carries and checkpoints like any state."""
 
     num_users: int
     num_items: int
-    train_pos: jax.Array            # (num_users, max_train) int32, -1 padded
+    train_pos: jax.Array            # (num_users, capacity) int32, -1 padded
     item_weights: jax.Array         # (num_items,) float32 interaction counts
+    row_count: Optional[jax.Array] = None   # (num_users,) int32 valid rows
+    write_pos: Optional[jax.Array] = None   # (num_users,) int32 ring cursor
+
+    def apply_events(self, user_ids, item_ids):
+        """Fold one micro-batch of (user, item) events into the view.
+
+        ``user_ids`` / ``item_ids``: equal-length int32 arrays; ``user_id
+        < 0`` marks padding (callers pad event batches to a fixed size so
+        every micro-batch hits the same compiled program — one trace per
+        distinct length, counted by ``APPLY_EVENTS_TRACES``).  Each event
+        appends its item to the user's ring (overwriting the oldest entry
+        once ``row_count`` saturates at capacity) and bumps the item's
+        popularity count.
+
+        Returns ``(new_view, new_user_mask, new_item_mask)`` where the masks
+        flag users/items seen for the first time (callers initialize fresh
+        embedding rows from them).  The input view's buffers are **donated**
+        — use the returned view only (which is why offline memoized views,
+        shared by reference, refuse this method)."""
+        if self.row_count is None or self.write_pos is None:
+            raise ValueError(
+                "apply_events needs ring state (row_count/write_pos); build "
+                "the view with stream_ring_dataset(...) — offline "
+                "device_cf_dataset views are shared/memoized and must stay "
+                "immutable")
+        users = jax.device_put(np.asarray(user_ids, np.int32))
+        items = jax.device_put(np.asarray(item_ids, np.int32))
+        if users.shape != items.shape or users.ndim != 1:
+            raise ValueError(f"event arrays must be equal-length 1-D, got "
+                             f"{users.shape} vs {items.shape}")
+        tp, iw, rc, wp, new_u, new_i = _apply_events_jit(
+            self.train_pos, self.item_weights, self.row_count,
+            self.write_pos, users, items)
+        view = dataclasses.replace(self, train_pos=tp, item_weights=iw,
+                                   row_count=rc, write_pos=wp)
+        return view, new_u, new_i
+
+
+jax.tree_util.register_dataclass(
+    DeviceCFDataset,
+    data_fields=["train_pos", "item_weights", "row_count", "write_pos"],
+    meta_fields=["num_users", "num_items"])
+
+
+#: one trace per distinct event-batch length — re-tracing per micro-batch
+#: would mean the ingest path recompiles in steady state (tests arm a budget
+#: via ``APPLY_EVENTS_TRACES.check(budget=...)``).
+APPLY_EVENTS_TRACES = TraceCounter("device_cf_dataset.apply_events")
+
+
+def _apply_events_impl(train_pos, item_weights, row_count, write_pos,
+                       users, items):
+    """Sequential ring fold over one padded event batch.
+
+    The per-event ``fori_loop`` preserves arrival order, so duplicate users
+    within one micro-batch append in sequence (a vectorized scatter would
+    collapse them to one slot).  Event count per micro-batch is small
+    (hundreds), so the sequential loop is not the bottleneck — the tables
+    it indexes stay resident and donated."""
+    capacity = train_pos.shape[1]
+    valid = users >= 0
+    seen_user = row_count > 0
+    seen_item = item_weights > 0
+    # popularity counts: one masked scatter-add (padding rows add 0 to row 0)
+    item_weights = item_weights.at[jnp.where(valid, items, 0)].add(
+        valid.astype(item_weights.dtype))
+
+    def body(i, carry):
+        tp, rc, wp = carry
+        ok = users[i] >= 0
+        u = jnp.where(ok, users[i], 0)
+        slot = wp[u]
+        tp = tp.at[u, slot].set(jnp.where(ok, items[i], tp[u, slot]))
+        wp = wp.at[u].set(jnp.where(ok, (slot + 1) % capacity, slot))
+        rc = rc.at[u].set(jnp.where(ok, jnp.minimum(rc[u] + 1, capacity),
+                                    rc[u]))
+        return tp, rc, wp
+
+    train_pos, row_count, write_pos = jax.lax.fori_loop(
+        0, users.shape[0], body, (train_pos, row_count, write_pos))
+    new_users = (row_count > 0) & ~seen_user
+    new_items = (item_weights > 0) & ~seen_item
+    return train_pos, item_weights, row_count, write_pos, new_users, new_items
+
+
+_apply_events_jit = jax.jit(APPLY_EVENTS_TRACES.wrap(_apply_events_impl),
+                            donate_argnums=(0, 1, 2, 3))
 
 
 _DEVICE_VIEWS: dict[int, DeviceCFDataset] = {}
 
 
-def device_cf_dataset(ds: CFDataset) -> DeviceCFDataset:
+def device_cf_dataset(ds: CFDataset, *,
+                      allow_empty_users: Optional[bool] = None
+                      ) -> DeviceCFDataset:
     """Upload ``train_pos`` + popularity weights once, ahead of the epoch.
 
     Memoized per ``CFDataset`` instance (dropped when the dataset is
     garbage-collected), so repeated callers — the executor, the per-step
     ``cf_batch``, popularity-weight consumers — share one device copy
-    instead of re-uploading the table.  Datasets are treated as immutable.
+    instead of re-uploading the table.  Datasets are treated as immutable
+    (streaming needs a private, mutable-by-replacement view — that is
+    :func:`stream_ring_dataset`).
+
+    Zero-interaction users have an *empty sample range*: a batch row drawn
+    for them has no positive to gather.  ``allow_empty_users`` controls the
+    contract:
+
+    * ``None`` (default): empty users are tolerated — their rows fall back
+      to a **uniform item draw** in the batch derivation (documented in
+      :func:`_cf_batch_from`) — but an *all*-empty dataset (the cold-start
+      stream case) raises, because every batch row would be fallback noise;
+      cold starts belong to :func:`stream_ring_dataset`.
+    * ``False``: any empty user raises (strict offline mode).
+    * ``True``: anything goes (the caller owns sampling).
     """
+    empty = ~(ds.train_pos >= 0).any(axis=1)
+    if allow_empty_users is not True:
+        if empty.all() and ds.num_users > 0:
+            raise ValueError(
+                "every user has zero train interactions — an offline device "
+                "view would sample pure fallback noise.  For cold-start "
+                "streaming build the view with stream_ring_dataset(...) and "
+                "feed it events via apply_events; pass "
+                "allow_empty_users=True to override")
+        if allow_empty_users is False and empty.any():
+            raise ValueError(
+                f"{int(empty.sum())} user(s) have zero train interactions "
+                "(empty sample ranges); their batch rows fall back to a "
+                "uniform item draw — pass allow_empty_users=None to accept "
+                "the fallback or clean the dataset")
     view = _DEVICE_VIEWS.get(id(ds))
     if view is None:
         valid = ds.train_pos[ds.train_pos >= 0]
@@ -127,11 +263,56 @@ def device_cf_dataset(ds: CFDataset) -> DeviceCFDataset:
     return view
 
 
-def _cf_batch_from(train_pos: jax.Array, num_users: int, step, batch_size: int,
+def stream_ring_dataset(num_users: int, num_items: int,
+                        capacity: int = 32, *,
+                        base: Optional[CFDataset] = None) -> DeviceCFDataset:
+    """A *streaming* device view: per-user positives in a fixed-capacity ring.
+
+    ``base=None`` starts cold — empty rings, zero popularity (legal here,
+    unlike :func:`device_cf_dataset`, because the streaming batch sampler
+    restricts its user draw to users with ``row_count > 0`` and the service
+    loop does not train before the first event).  With ``base``, the ring is
+    warm-started from the newest ``capacity`` stored positives per user and
+    the popularity counts recomputed from exactly what the ring holds.
+
+    The returned view is **private** (never memoized): ``apply_events``
+    donates its buffers, which must not alias a view other callers share.
+    """
+    if capacity < 1:
+        raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+    train = np.full((num_users, capacity), -1, np.int32)
+    if base is not None:
+        if (base.num_users, base.num_items) != (num_users, num_items):
+            raise ValueError(
+                f"base dataset is {base.num_users}x{base.num_items}, "
+                f"asked for {num_users}x{num_items}")
+        for u in range(num_users):
+            row = base.train_pos[u]
+            row = row[row >= 0][-capacity:]
+            train[u, :row.size] = row
+    counts = np.bincount(train[train >= 0].ravel(), minlength=num_items)
+    row_count = (train >= 0).sum(axis=1).astype(np.int32)
+    return DeviceCFDataset(
+        num_users, num_items,
+        jnp.asarray(train, jnp.int32),
+        jnp.asarray(counts, jnp.float32),
+        row_count=jnp.asarray(row_count),
+        write_pos=jnp.asarray(row_count % capacity))
+
+
+def _cf_batch_from(train_pos: jax.Array, num_users: int, num_items: int,
+                   step, batch_size: int,
                    history_len: int, seed: int) -> Batch:
     """The one (seed, step)-pure batch derivation, shared by the host and
     device entry points.  ``step`` may be a traced int32 (in-scan use); the
-    mix is threefry ``fold_in`` — explicit and stable, no CPython hash."""
+    mix is threefry ``fold_in`` — explicit and stable, no CPython hash.
+
+    Fallback chain for padded slots: a drawn -1 resamples from column 0;
+    a user whose *whole row* is empty (zero interactions) falls back to a
+    uniform item draw — documented behavior, guarded at view construction
+    by ``device_cf_dataset(allow_empty_users=...)``.  The uniform key is
+    ``fold_in(key, 7)`` (not a wider split) so users/cols draws — and with
+    them every trajectory of a dataset with no empty users — are unchanged."""
     key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
     ku, kc = jax.random.split(key)
     users = jax.random.randint(ku, (batch_size,), 0, num_users, jnp.int32)
@@ -140,7 +321,9 @@ def _cf_batch_from(train_pos: jax.Array, num_users: int, step, batch_size: int,
     pos = train_pos[users, cols]
     # replace -1 (padded) with a resample from column 0
     pos = jnp.where(pos >= 0, pos, train_pos[users, 0])
-    pos = jnp.where(pos >= 0, pos, 0).astype(jnp.int32)
+    uniform = jax.random.randint(jax.random.fold_in(key, 7), (batch_size,),
+                                 0, num_items, jnp.int32)
+    pos = jnp.where(pos >= 0, pos, uniform).astype(jnp.int32)
     hist_ids = hist_mask = None
     if history_len > 0:
         h = train_pos[users, :history_len]
@@ -159,7 +342,7 @@ def cf_batch(ds: CFDataset, step: int, batch_size: int, history_len: int = 0,
     device view of ``train_pos`` is memoized, so per-step calls don't
     re-upload the table."""
     return _cf_batch_from(device_cf_dataset(ds).train_pos, ds.num_users,
-                          step, batch_size, history_len, seed)
+                          ds.num_items, step, batch_size, history_len, seed)
 
 
 def cf_batch_device(ds: DeviceCFDataset, seed: int, step, batch_size: int,
@@ -168,8 +351,64 @@ def cf_batch_device(ds: DeviceCFDataset, seed: int, step, batch_size: int,
     ``step`` may be a traced scalar (the ``lax.scan`` index inside an
     ``EpochExecutor`` dispatch window), so steady-state training runs no host
     numpy and copies nothing to the device per step."""
-    return _cf_batch_from(ds.train_pos, ds.num_users, step, batch_size,
-                          history_len, seed)
+    return _cf_batch_from(ds.train_pos, ds.num_users, ds.num_items, step,
+                          batch_size, history_len, seed)
+
+
+def stream_batch_device(ds: DeviceCFDataset, seed: int, step,
+                        batch_size: int, *, recency: float = 0.0,
+                        history_len: int = 0) -> Batch:
+    """Recency-weighted batch over a streaming ring view — jit/scan-traceable
+    (``step`` may be the traced scan index), pure in (seed, step, ring state).
+
+    Users are drawn uniformly over users with at least one ingested positive
+    (``row_count > 0`` — the cold-start guard the offline sampler lacks);
+    each drawn user contributes its positive at ring *age* ``a`` (0 = newest)
+    with ``a`` from a truncated geometric, ``P(a) ∝ exp(-recency * a)`` over
+    the user's valid ages — ``recency=0`` degenerates to uniform-over-ring,
+    larger values concentrate training on what just arrived (the freshness
+    knob the SLO bench sweeps).  The key is decorrelated from the train
+    step's ``fold_in(PRNGKey(seed), step)`` by one extra fold.
+
+    Degenerate case (no user has any event yet): the masked user draw
+    collapses to user 0 / its empty ring falls back to item 0.  The service
+    loop never trains before the first ingested event, so this is never a
+    trained-on batch — documented rather than guarded here to keep the
+    derivation branch-free and traceable."""
+    capacity = ds.train_pos.shape[1]
+    if ds.row_count is None or ds.write_pos is None:
+        raise ValueError("stream_batch_device needs a ring view "
+                         "(stream_ring_dataset), not an offline one")
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), step), 1)
+    ku, ka = jax.random.split(key)
+    has_events = ds.row_count > 0
+    logits = jnp.where(has_events, 0.0, -jnp.inf)
+    users = jax.random.categorical(ku, logits, shape=(batch_size,)
+                                   ).astype(jnp.int32)
+    count = jnp.maximum(ds.row_count[users], 1).astype(jnp.float32)
+    u01 = jax.random.uniform(ka, (batch_size,))
+    if recency > 0.0:
+        # inverse CDF of the truncated geometric over ages [0, count)
+        q = float(np.exp(-recency))
+        age = jnp.floor(jnp.log1p(-u01 * (1.0 - q ** count)) / np.log(q))
+    else:
+        age = jnp.floor(u01 * count)
+    age = jnp.clip(age, 0, count - 1).astype(jnp.int32)
+    cols = (ds.write_pos[users] - 1 - age) % capacity
+    pos = ds.train_pos[users, cols]
+    pos = jnp.where(pos >= 0, pos, 0).astype(jnp.int32)
+    hist_ids = hist_mask = None
+    if history_len > 0:
+        # history = the user's most recent ``history_len`` ring entries
+        h_age = jnp.arange(history_len, dtype=jnp.int32)[None, :]
+        h_cols = (ds.write_pos[users, None] - 1 - h_age) % capacity
+        h = ds.train_pos[users[:, None], h_cols]
+        h_ok = (h_age < ds.row_count[users, None]) & (h >= 0)
+        hist_mask = h_ok.astype(jnp.float32)
+        hist_ids = jnp.where(h_ok, h, 0).astype(jnp.int32)
+    return Batch(user_ids=users, pos_ids=pos,
+                 hist_ids=hist_ids, hist_mask=hist_mask)
 
 
 def shard_bounds(global_batch: int, num_shards: int) -> list[tuple[int, int]]:
@@ -208,8 +447,8 @@ def cf_batch_shard(ds: DeviceCFDataset, seed: int, step, global_batch: int,
     makes the values independent of where they are computed.
     """
     start, stop = shard_bounds(global_batch, num_shards)[shard]
-    full = _cf_batch_from(ds.train_pos, ds.num_users, step, global_batch,
-                          history_len, seed)
+    full = _cf_batch_from(ds.train_pos, ds.num_users, ds.num_items, step,
+                          global_batch, history_len, seed)
     return jax.tree.map(lambda x: x[start:stop], full)
 
 

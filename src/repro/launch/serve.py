@@ -107,16 +107,29 @@ def serve_mf(args) -> None:
     print(f"[serve] top-{args.topk} for user {uid} ({args.pruner}): "
           f"{recs[:5]}")
 
-    # Online refresh: extend the run by 50 steps (batches are pure in
-    # (seed, step), so this is the original trajectory continued), then
-    # serve the updated device-resident tables with no host round-trip.
-    state, _ = trainer.train_mf(cfg, ds, steps=args.train_steps + 50,
-                                batch_size=128, engine=engine,
-                                log=lambda *_: None)
-    server.refresh_from(state)
+    # Online refresh: warm-start the streaming service on the trained state
+    # (state + a ring view over the offline dataset are *consumed* — training
+    # donates their buffers) and run a couple of live ingest → train →
+    # refresh_from rounds against this very server.  This is the one blessed
+    # online-refresh path; see repro.stream.service.StreamingTrainer.
+    from repro.stream.service import StreamingConfig, StreamingTrainer
+    from repro.stream.sources import SyntheticStream
+
+    live = SyntheticStream(users, items, seed=1, total=512,
+                           user_drift=0.01, item_drift=0.01)
+    streamer = StreamingTrainer(
+        cfg, live,
+        StreamingConfig(capacity=16, micro_batch=256, steps_per_round=25,
+                        batch_size=128, seed=0),
+        state=state,
+        data=pipeline.stream_ring_dataset(users, items, 16, base=ds),
+        engine=engine, recommender=server, log=lambda *_: None)
+    del state                                   # donated to the service loop
+    streamer.run(rounds=2)
     recs2 = server.recommend(uid)
-    print(f"[serve] after refresh_from (50 more steps, no retrace: "
-          f"traces={server.trace_count}): {recs2[:5]}")
+    print(f"[serve] after {streamer.rounds} streaming rounds "
+          f"({streamer.events} live events, {streamer.step} total steps, "
+          f"no retrace: traces={server.trace_count}): {recs2[:5]}")
     server.stop()
 
 

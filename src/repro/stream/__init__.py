@@ -1,0 +1,26 @@
+"""Online streaming training: live ingestion, incremental device dataset,
+and the train/serve freshness loop.
+
+Layers (ISSUE 8 / ROADMAP "online / streaming training service"):
+
+* :mod:`repro.stream.sources` — the :class:`~repro.stream.sources.\
+InteractionStream` protocol plus a seeded synthetic generator with drifting
+  popularity, a JSONL replay log (read/write), and a probe splicer, all
+  seekable so runs are reproducible and crash-resumable;
+* ``DeviceCFDataset.apply_events`` / ``stream_ring_dataset`` /
+  ``stream_batch_device`` (:mod:`repro.data.pipeline`) — the incremental
+  device-resident dataset under a fixed-capacity per-user ring;
+* :mod:`repro.stream.service` — :class:`~repro.stream.service.\
+StreamingTrainer`, the long-lived ingest → train-on-recent → refresh loop
+  with round-edge checkpoints covering the stream cursor + ring state.
+"""
+from repro.stream.sources import (EventBatch, InteractionStream,
+                                  ProbeInjector, ReplayLogStream,
+                                  SyntheticStream, record_stream)
+from repro.stream.service import StreamingConfig, StreamingTrainer
+
+__all__ = [
+    "EventBatch", "InteractionStream", "ProbeInjector", "ReplayLogStream",
+    "SyntheticStream", "record_stream",
+    "StreamingConfig", "StreamingTrainer",
+]

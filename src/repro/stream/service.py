@@ -1,0 +1,344 @@
+"""The streaming service loop: ingest → train-on-recent → refresh → serve.
+
+:class:`StreamingTrainer` is the long-lived driver that turns the repo's
+offline primitives into an online recommender:
+
+* **ingest** — pull one micro-batch from an :class:`~repro.stream.sources.\
+InteractionStream`, fold it into the device-resident ring dataset
+  (``DeviceCFDataset.apply_events`` — no table re-upload, one trace per
+  event-batch shape) and initialize embedding rows for first-seen
+  users/items from a ``(seed, events)``-pure key;
+* **train-on-recent** — one :class:`~repro.train.trainer.EpochExecutor`
+  window per round over ``stream_batch_device``'s recency-weighted ring
+  sampler, with the live popularity counts feeding the ``popularity``
+  ``NegativeSampler`` (the adaptive-sampling loop of Chen et al.,
+  arXiv 1706.07881, on the SimpleX objective the engine implements);
+  the ring dataset rides the scanned **carry** (never a closure), so the
+  steady state is one compiled program — trace budget 1, counter-asserted;
+* **refresh** — ``BatchingRecommender.refresh_from`` re-points the live
+  serving program at the just-trained tables (zero retrace);
+* **checkpoint** — round-edge checkpoints extend the window-edge scheme to
+  cover the stream cursor and the full ring state, so a mid-stream crash
+  resumes **bit-exactly**: rounds are pure functions of (cursor, step,
+  state, ring), every checkpoint lands on a round edge, and the resumed
+  stream is seeked back to the saved cursor (property-tested over arbitrary
+  failure offsets in tests/test_stream.py).
+
+Freshness SLO: the wall-clock from an event being ingested to its item
+appearing in that user's served top-k.  ``benchmarks/bench_streaming.py``
+measures it by splicing probe events into the stream and timing rounds
+until the probe item surfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.sanitize import TraceCounter
+from repro.core import mf
+from repro.core.engine import StepEngine, resolve_engine
+from repro.data import pipeline
+from repro.stream.sources import InteractionStream
+from repro.train import checkpoint as ckpt
+from repro.train import trainer
+
+
+class StreamCarry(NamedTuple):
+    """The executor carry of a streaming round: model state + ring dataset.
+
+    The dataset must thread through the scan as carry (not closure): a
+    closed-over jax array is baked into the compiled window as a constant,
+    so every ingest round would retrace — exactly the recompile-per-dispatch
+    failure the trace budget exists to catch."""
+
+    state: mf.MFState
+    data: pipeline.DeviceCFDataset
+
+
+@dataclasses.dataclass
+class StreamingConfig:
+    """Service-loop knobs (model knobs stay in ``mf.MFConfig``)."""
+
+    capacity: int = 32          # per-user ring rows (cold-start construction)
+    micro_batch: int = 256      # events ingested per round (padded, 1 shape)
+    steps_per_round: int = 32   # executor window length per round
+    batch_size: int = 256
+    recency: float = 0.5        # ring age decay; 0 = uniform over the ring
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 1         # rounds between checkpoints (0 = off)
+    ckpt_keep: int = 3
+    max_restarts: int = 2
+    fail_at_event: Optional[int] = None     # crash injection (tests/demos)
+
+
+#: fresh-row initialization traces once per table shape (user + item = 2)
+INIT_ROW_TRACES = TraceCounter("streaming_trainer.init_rows")
+
+
+def _init_rows_impl(table, mask, key, std):
+    fresh = jax.random.normal(key, table.shape, table.dtype) * std
+    return jnp.where(mask[:, None], fresh, table)
+
+
+_init_rows_jit = jax.jit(INIT_ROW_TRACES.wrap(_init_rows_impl),
+                         donate_argnums=(0,))
+
+
+class StreamingTrainer:
+    """Long-lived ingest → train → refresh driver over one stream.
+
+    Cold start (the default): empty rings, embeddings initialized but only
+    trained once events exist — ``run_round`` never trains before the first
+    ingested event.  Warm start: pass ``state`` (a trained ``MFState``) and
+    ``data`` (a ``stream_ring_dataset(..., base=...)`` view); note both are
+    **consumed** — training donates their buffers, so the caller must drop
+    its references and, after any crash, resume from a checkpoint rather
+    than the originals (cold starts can also replay from scratch, being
+    pure in the seed).
+
+    ``recommender``: an optional live ``BatchingRecommender``; every round
+    ends with ``refresh_from`` so served top-k tracks training with no
+    retrace — the one blessed online-refresh path (``launch/serve.py``
+    routes through here).
+    """
+
+    def __init__(self, cfg: mf.MFConfig, stream: InteractionStream,
+                 scfg: Optional[StreamingConfig] = None, *,
+                 state: Optional[mf.MFState] = None,
+                 data: Optional[pipeline.DeviceCFDataset] = None,
+                 engine: Optional[StepEngine] = None,
+                 recommender=None,
+                 log: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.stream = stream
+        self.scfg = scfg or StreamingConfig()
+        self.engine = engine or resolve_engine(cfg)
+        self.recommender = recommender
+        self.log = log
+        self._cold_start = state is None and data is None
+        if data is None:
+            data = pipeline.stream_ring_dataset(cfg.num_users, cfg.num_items,
+                                                self.scfg.capacity)
+        if data.row_count is None or data.write_pos is None:
+            raise ValueError("StreamingTrainer needs a ring view — build "
+                             "data with pipeline.stream_ring_dataset(...)")
+        if state is None:
+            state = mf.init_mf(jax.random.PRNGKey(self.scfg.seed), cfg)
+        self.state = state
+        self.data = data
+        self.step = int(state.step)
+        self.rounds = 0
+        self.events = int(stream.cursor)
+        self.restarts = 0
+        self._has_data = bool(np.asarray(jnp.any(data.row_count > 0)))
+        self._losses: dict[int, list] = {}
+        self.last_round_stats: dict = {}
+        if cfg.init == "xavier":
+            self._std_u = float(np.sqrt(2.0 / (cfg.num_users + cfg.emb_dim)))
+            self._std_i = float(np.sqrt(2.0 / (cfg.num_items + cfg.emb_dim)))
+        else:
+            self._std_u = self._std_i = float(cfg.init_std)
+
+        def body(carry: StreamCarry, step):
+            batch = pipeline.stream_batch_device(
+                carry.data, self.scfg.seed, step, self.scfg.batch_size,
+                recency=self.scfg.recency, history_len=cfg.history_len)
+            rng = jax.random.fold_in(jax.random.PRNGKey(self.scfg.seed), step)
+            new_state, loss = mf.heat_train_step(
+                carry.state, batch, rng, cfg, engine=self.engine,
+                item_weights=carry.data.item_weights)
+            return StreamCarry(new_state, carry.data), loss
+
+        # steady state dispatches full rounds only -> ONE window length ->
+        # trace budget 1, checked at every dispatch edge.
+        self.executor = trainer.EpochExecutor(
+            body, self.scfg.steps_per_round, trace_budget=1)
+
+    # -- ingest -------------------------------------------------------------
+
+    def ingest_events(self, user_ids, item_ids) -> int:
+        """Fold host event arrays into the device ring; returns the count.
+
+        Events are padded to ``micro_batch``-sized chunks so every call hits
+        the same compiled ``apply_events`` program (one trace, ever).  New
+        users/items get embedding rows drawn from a ``(seed, events)``-pure
+        key — a resumed run re-initializes the same rows identically.
+
+        This is the low-level entry ``run_round`` feeds stream batches
+        through; out-of-band callers (the freshness bench's probe bursts)
+        may use it too, but only stream-sourced events are covered by the
+        crash/resume contract (the cursor does not know about them)."""
+        users = np.asarray(user_ids, np.int32).reshape(-1)
+        items = np.asarray(item_ids, np.int32).reshape(-1)
+        if users.size != items.size:
+            raise ValueError("user/item event arrays differ in length")
+        chunk = self.scfg.micro_batch
+        for s in range(0, users.size, chunk):
+            n = min(chunk, users.size - s)
+            pu = np.full(chunk, -1, np.int32)
+            pi = np.full(chunk, -1, np.int32)
+            pu[:n] = users[s:s + n]
+            pi[:n] = items[s:s + n]
+            self.data, new_u, new_i = self.data.apply_events(pu, pi)
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self.scfg.seed),
+                (self.events + s) % np.iinfo(np.int32).max)
+            params = self.state.params
+            user_table = _init_rows_jit(params.user_table, new_u,
+                                        jax.random.fold_in(key, 0),
+                                        self._std_u)
+            item_table = _init_rows_jit(params.item_table, new_i,
+                                        jax.random.fold_in(key, 1),
+                                        self._std_i)
+            self.state = self.state._replace(params=params._replace(
+                user_table=user_table, item_table=item_table))
+        self.events += int(users.size)
+        if users.size:
+            self._has_data = True
+        return int(users.size)
+
+    # -- train --------------------------------------------------------------
+
+    def train_round(self) -> np.ndarray:
+        """One executor window over the current ring; returns the host loss
+        array for the round (the only sync is the window-edge readback)."""
+        if not self._has_data:
+            raise ValueError("the ring holds no events yet — ingest before "
+                             "training (run_round() orders this correctly)")
+        carry = StreamCarry(self.state, self.data)
+        carry, window, length = trainer.run_window(
+            self.executor, carry, self.step,
+            self.step + self.scfg.steps_per_round)
+        self.state, self.data = carry.state, carry.data
+        self.step += length
+        self._losses[self.rounds] = window.tolist()
+        return window
+
+    # -- the round ----------------------------------------------------------
+
+    def run_round(self) -> bool:
+        """ingest → train → refresh → (checkpoint); False when the stream is
+        exhausted.  Crash injection (``fail_at_event``) fires *before* the
+        micro-batch containing that offset is applied, so the failure always
+        lands between rounds — where checkpoints are."""
+        scfg = self.scfg
+        t0 = time.perf_counter()
+        batch = self.stream.next_batch(scfg.micro_batch)
+        if batch is None or len(batch) == 0:
+            return False
+        if (scfg.fail_at_event is not None and self.restarts == 0
+                and batch.start <= scfg.fail_at_event < batch.start + len(batch)):
+            raise trainer.SimulatedFailure(
+                f"injected failure at event {scfg.fail_at_event} "
+                f"(round {self.rounds})")
+        self.ingest_events(batch.user_ids, batch.item_ids)
+        t1 = time.perf_counter()
+        window = self.train_round()
+        t2 = time.perf_counter()
+        if self.recommender is not None:
+            self.recommender.refresh_from(self.state)
+        t3 = time.perf_counter()
+        self.rounds += 1
+        if scfg.ckpt_dir and scfg.ckpt_every \
+                and self.rounds % scfg.ckpt_every == 0:
+            self._save()
+        self.last_round_stats = {
+            "round": self.rounds, "events": len(batch),
+            "ingest_s": t1 - t0, "train_s": t2 - t1, "refresh_s": t3 - t2,
+            "loss": float(window.mean()),
+        }
+        return True
+
+    def run(self, rounds: Optional[int] = None) -> int:
+        """Run until ``rounds`` more rounds have *completed* (or the stream
+        runs dry).  Injected failures restore the latest round-edge
+        checkpoint — or replay a cold start from scratch — and re-run the
+        lost rounds, exactly as a pod restart would; returns the net number
+        of new rounds."""
+        start = self.rounds
+        target = None if rounds is None else start + rounds
+        while target is None or self.rounds < target:
+            try:
+                if not self.run_round():
+                    break
+            except trainer.SimulatedFailure as e:
+                self.restarts += 1
+                if self.restarts > self.scfg.max_restarts:
+                    raise
+                self.log(f"[stream] {e} -> restoring")
+                self._restore_or_reset()
+        return self.rounds - start
+
+    # -- checkpoint / resume -------------------------------------------------
+
+    def _save(self) -> None:
+        ckpt.save(self.scfg.ckpt_dir, self.rounds,
+                  {"state": self.state, "data": self.data},
+                  extra={"cursor": int(self.stream.cursor),
+                         "step": int(self.step),
+                         "events": int(self.events)},
+                  keep=self.scfg.ckpt_keep)
+
+    def _template(self):
+        """A same-structure pytree for elastic restore (shapes/dtypes come
+        from the manifest; the template only fixes structure and dtype)."""
+        return {"state": mf.init_mf(jax.random.PRNGKey(self.scfg.seed),
+                                    self.cfg),
+                "data": pipeline.stream_ring_dataset(
+                    self.cfg.num_users, self.cfg.num_items,
+                    self.scfg.capacity)}
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Resume from the latest (or given) round-edge checkpoint: model
+        state, ring dataset, step/event counters, and the stream cursor —
+        the complete round input, which is why the resumed trajectory is
+        bit-identical to the uninterrupted one."""
+        tree, rounds, extra = ckpt.restore(self.scfg.ckpt_dir,
+                                           self._template(), step)
+        self.state, self.data = tree["state"], tree["data"]
+        self.rounds = int(rounds)
+        self.step = int(extra["step"])
+        self.events = int(extra["events"])
+        self.stream.seek(int(extra["cursor"]))
+        self._has_data = bool(np.asarray(jnp.any(self.data.row_count > 0)))
+        self._losses = {r: v for r, v in self._losses.items()
+                        if r < self.rounds}
+        if self.recommender is not None:
+            self.recommender.refresh_from(self.state)
+        return self.rounds
+
+    def _restore_or_reset(self) -> None:
+        if self.scfg.ckpt_dir and \
+                ckpt.latest_step(self.scfg.ckpt_dir) is not None:
+            self.restore()
+            return
+        if not self._cold_start:
+            raise RuntimeError(
+                "crashed before the first checkpoint of a warm-started "
+                "trainer: the initial state was donated and cannot be "
+                "replayed — set ckpt_every=1 (or checkpoint before "
+                "streaming) when warm-starting with failure injection")
+        self.log("[stream] no checkpoint yet -> cold replay from scratch")
+        self.state = mf.init_mf(jax.random.PRNGKey(self.scfg.seed), self.cfg)
+        self.data = pipeline.stream_ring_dataset(
+            self.cfg.num_users, self.cfg.num_items, self.scfg.capacity)
+        self.step = 0
+        self.rounds = 0
+        self.events = 0
+        self._has_data = False
+        self._losses = {}
+        self.stream.seek(0)
+
+    # -- introspection -------------------------------------------------------
+
+    def loss_history(self) -> list:
+        """Per-step losses in round order (resume-deduplicated: replayed
+        rounds overwrite their pre-crash entries)."""
+        return [loss for r in sorted(self._losses)
+                for loss in self._losses[r]]

@@ -27,6 +27,18 @@ import jax
 import numpy as np
 
 
+def _json_default(obj):
+    """Manifest ``extra`` entries often arrive as numpy scalars (a stream
+    cursor read off an array, a np.float32 loss) — store them as their
+    python values instead of crashing the atomic commit mid-write."""
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, np.ndarray) and obj.ndim == 0:
+        return obj.item()
+    raise TypeError(f"checkpoint extra is not JSON-serializable: "
+                    f"{type(obj).__name__}")
+
+
 def _flatten_with_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -68,7 +80,7 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
             {"name": name, "file": fname, "shape": list(arr.shape),
              "dtype": dtype_name})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+        json.dump(manifest, f, indent=1, default=_json_default)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)                      # atomic commit

@@ -208,15 +208,19 @@ def _window_length(step: int, stop: int, k: int, ckpt_every: int,
     return length
 
 
-def _run_window(executor: EpochExecutor, state, step: int, stop: int,
-                ckpt_every: int, fail_at_step: Optional[int]):
+def run_window(executor: EpochExecutor, state, step: int, stop: int,
+               ckpt_every: int = 0, fail_at_step: Optional[int] = None):
     """One truncated dispatch window + its edge sync — the single definition
-    of the window contract both drivers (train_lm / train_mf) run on.
+    of the window contract every driver (train_lm / train_mf / the streaming
+    service's train-on-recent rounds) runs on.
     Returns (new_state, host loss array, length)."""
     length = _window_length(step, stop, executor.steps_per_dispatch,
                             ckpt_every, fail_at_step)
     state, window = executor.run(state, step, length)
     return state, np.asarray(window), length
+
+
+_run_window = run_window        # internal callers predate the public name
 
 
 def init_lm_state(rng: jax.Array, cfg: ArchConfig, opts: lm.TrainOptions,

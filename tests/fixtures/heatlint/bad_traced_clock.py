@@ -1,0 +1,26 @@
+"""heatlint fixture: HL108 — wall-clock reads inside traced code.
+
+Intentionally bad; linted explicitly by tests, never executed.
+"""
+import time
+
+import jax
+
+
+@jax.jit
+def stamped(x):
+    return x + time.time()              # HL108: frozen at trace time
+
+
+def recency_window(state, steps):
+    def body(carry, step):
+        now = time.monotonic()          # HL108: same clock every step
+        return carry * now, step
+    return jax.lax.scan(body, state, steps)
+
+
+def host_side_timing(fn, x):
+    # clocks OUTSIDE traced code are fine (this is how benches time)
+    t0 = time.perf_counter()
+    y = jax.jit(fn)(x)
+    return y, time.perf_counter() - t0

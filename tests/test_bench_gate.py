@@ -1,13 +1,14 @@
-"""benchmarks/check.py serving-artifact schema gate: a well-formed
-BENCH_serving.json passes, and each class of malformation (missing file,
-missing config key, missing row key, unlabeled / mislabeled mode, absent
-default-budget row) is named in the problem list."""
+"""benchmarks/check.py artifact schema gates: a well-formed
+BENCH_serving.json / BENCH_streaming.json passes, and each class of
+malformation (missing file, missing config key, missing row key, unlabeled /
+mislabeled mode, absent default-budget / freshness row, FRESHNESS flag,
+blown trace budget) is named in the problem list."""
 import copy
 import json
 
 import pytest
 
-from benchmarks.check import serving_problems
+from benchmarks.check import serving_problems, streaming_problems
 
 VALID = {
     "config": {"num_items": 1000, "num_users": 64, "emb_dim": 16,
@@ -101,3 +102,115 @@ def test_empty_rows_fail(artifact):
     bad = copy.deepcopy(VALID)
     bad["rows"] = []
     assert any("no rows" in p for p in serving_problems(artifact(bad)))
+
+
+# ---------------------------------------------------------------------------
+# BENCH_streaming.json gate
+# ---------------------------------------------------------------------------
+
+STREAM_VALID = {
+    "config": {"num_users": 1024, "num_items": 2048, "emb_dim": 32,
+               "capacity": 32, "micro_batch": 512, "steps_per_round": 48,
+               "topk": 10, "fresh_gate": 0.75, "max_fresh_rounds": 8},
+    "jax_backend": "cpu",
+    "rows": [
+        {"name": "stream/ingest", "us_per_call": 2500.0,
+         "derived": "190,000 events/s", "mode": "native",
+         "events": 6144, "events_per_sec": 190_000.0},
+        {"name": "stream/train", "us_per_call": 900.0,
+         "derived": "1,100 steps/s", "mode": "native",
+         "steps": 576, "steps_per_sec": 1100.0},
+        {"name": "stream/round", "us_per_call": 50_000.0,
+         "derived": "50.0 ms/round", "mode": "native", "rounds": 12,
+         "round_ms": 50.0, "window_traces": 1, "serve_traces": 1},
+        {"name": "stream/freshness", "us_per_call": 120_000.0,
+         "derived": "4/4 probes served, p50=120 ms", "mode": "native",
+         "probes": 4, "served": 4, "fresh_frac": 1.0, "p50_ms": 120.0,
+         "p95_ms": 300.0, "max_fresh_rounds": 8},
+    ],
+}
+
+
+@pytest.fixture
+def stream_artifact(tmp_path):
+    def write(payload):
+        p = tmp_path / "BENCH_streaming.json"
+        p.write_text(json.dumps(payload))
+        return str(p)
+    return write
+
+
+def test_streaming_valid_artifact_passes(stream_artifact):
+    assert streaming_problems(stream_artifact(STREAM_VALID)) == []
+
+
+def test_streaming_missing_file_is_a_problem(tmp_path):
+    probs = streaming_problems(str(tmp_path / "nope.json"))
+    assert len(probs) == 1 and "never written" in probs[0]
+
+
+def test_streaming_missing_config_key_fails(stream_artifact):
+    bad = copy.deepcopy(STREAM_VALID)
+    del bad["config"]["fresh_gate"]
+    assert any("fresh_gate" in p
+               for p in streaming_problems(stream_artifact(bad)))
+
+
+@pytest.mark.parametrize("dropped", ["stream/ingest", "stream/freshness"])
+def test_streaming_requires_ingest_and_freshness_rows(stream_artifact, dropped):
+    bad = copy.deepcopy(STREAM_VALID)
+    bad["rows"] = [r for r in bad["rows"] if r["name"] != dropped]
+    probs = streaming_problems(stream_artifact(bad))
+    assert any(dropped in p and "missing" in p for p in probs)
+
+
+def test_streaming_row_without_mode_or_non_native_fails(stream_artifact):
+    bad = copy.deepcopy(STREAM_VALID)
+    del bad["rows"][0]["mode"]
+    assert any("'mode'" in p
+               for p in streaming_problems(stream_artifact(bad)))
+    bad = copy.deepcopy(STREAM_VALID)
+    bad["rows"][3]["mode"] = "interpret"
+    assert any("must be mode='native'" in p
+               for p in streaming_problems(stream_artifact(bad)))
+
+
+def test_streaming_missing_row_key_and_wrong_type_fail(stream_artifact):
+    bad = copy.deepcopy(STREAM_VALID)
+    del bad["rows"][3]["fresh_frac"]
+    assert any("'fresh_frac'" in p
+               for p in streaming_problems(stream_artifact(bad)))
+    bad = copy.deepcopy(STREAM_VALID)
+    bad["rows"][1]["steps_per_sec"] = "brisk"
+    assert any("'steps_per_sec'" in p
+               for p in streaming_problems(stream_artifact(bad)))
+
+
+def test_streaming_freshness_flag_fails(stream_artifact):
+    bad = copy.deepcopy(STREAM_VALID)
+    bad["rows"][3]["derived"] = "1/4 probes served FRESHNESS"
+    bad["rows"][3]["served"] = 1
+    bad["rows"][3]["fresh_frac"] = 0.25
+    assert any("FRESHNESS" in p
+               for p in streaming_problems(stream_artifact(bad)))
+
+
+def test_streaming_blown_trace_budget_fails(stream_artifact):
+    bad = copy.deepcopy(STREAM_VALID)
+    bad["rows"][2]["window_traces"] = 7
+    probs = streaming_problems(stream_artifact(bad))
+    assert any("retraced" in p and "window_traces=7" in p for p in probs)
+
+
+def test_streaming_fresh_frac_out_of_range_fails(stream_artifact):
+    bad = copy.deepcopy(STREAM_VALID)
+    bad["rows"][3]["fresh_frac"] = 1.5
+    assert any("outside [0, 1]" in p
+               for p in streaming_problems(stream_artifact(bad)))
+
+
+def test_streaming_unknown_row_family_fails(stream_artifact):
+    bad = copy.deepcopy(STREAM_VALID)
+    bad["rows"][0]["name"] = "stream/mystery"
+    assert any("unrecognized row family" in p
+               for p in streaming_problems(stream_artifact(bad)))

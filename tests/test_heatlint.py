@@ -83,6 +83,25 @@ def test_hl107_per_iteration_host_sync():
                          relpath="tests/bad_loop_sync.py") == []
 
 
+def test_hl108_wall_clock_in_traced_code():
+    v = _lint_fixture("bad_traced_clock.py")
+    assert _codes(v) == ["HL108"]
+    assert len(v) == 2          # time.time() in jit, time.monotonic() in scan
+
+
+def test_hl108_quiet_on_host_side_clocks():
+    src = textwrap.dedent("""\
+        import time
+        import jax
+
+        def bench(fn, x):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jax.jit(fn)(x))
+            return time.perf_counter() - t0
+    """)
+    assert lint_source(src) == []
+
+
 def test_clean_fixture_is_clean_under_every_scope():
     for rel in ("src/repro/clean_ok.py", "benchmarks/clean_ok.py",
                 "examples/clean_ok.py"):
