@@ -27,6 +27,12 @@ write (paths overridable via ``BENCH_RUN_JSON`` / ``BENCH_BACKENDS_JSON``):
     rows present and fully keyed, every row mode-labeled ``native``, no
     FRESHNESS flag (probes served within the SLO window), and the
     steady-state loop inside its trace budgets;
+  * BENCH_resilience.json (path overridable via ``BENCH_RESILIENCE_JSON``)
+    is schema-valid: config complete, one recovery row per fault class with
+    the fault actually recovered (no UNRECOVERED flag), the divergence
+    guard inside its throughput gate (no GUARD_OVERHEAD flag), the chaos
+    summary row reporting zero harness problems, every row mode-labeled
+    ``native``;
   * BENCH_backends.json has at least one ``mf``-layout and one ``head``-layout
     row for every *registered* loss backend — a partial file (a backend
     silently skipped) fails instead of shipping;
@@ -49,6 +55,8 @@ RUN_JSON = os.environ.get("BENCH_RUN_JSON", "BENCH_run.json")
 BACKENDS_JSON = os.environ.get("BENCH_BACKENDS_JSON", "BENCH_backends.json")
 SERVING_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 STREAMING_JSON = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
+RESILIENCE_JSON = os.environ.get("BENCH_RESILIENCE_JSON",
+                                 "BENCH_resilience.json")
 
 #: the execution-mode vocabulary every artifact row must label itself with
 #: (heatlint HL105 enforces the label statically; this gate enforces it on
@@ -105,6 +113,20 @@ def run_problems(path: str = RUN_JSON) -> list[str]:
                        if r.get("name", "").startswith("stream/")]
         if not stream_rows:
             problems.append("streaming suite ran but emitted no stream/ rows")
+    # when-present (committed BENCH_run.json files predate the suite): the
+    # resilience suite must emit its rows and none may carry a failure flag
+    resilience = run["suites"].get("resilience(chaos)")
+    if resilience is not None and resilience["status"] == "ok":
+        res_rows = [r for r in resilience["rows"]
+                    if r.get("name", "").startswith("resilience/")]
+        if not res_rows:
+            problems.append(
+                "resilience suite ran but emitted no resilience/ rows")
+        for flag in ("UNRECOVERED", "GUARD_OVERHEAD", "CHAOS"):
+            hit = [r["name"] for r in res_rows
+                   if flag in r.get("derived", "")]
+            if hit:
+                problems.append(f"resilience rows flagged {flag}: {hit}")
     return problems
 
 
@@ -331,9 +353,107 @@ def streaming_problems(path: str = STREAMING_JSON) -> list[str]:
     return problems
 
 
+# ---------------------------------------------------------------------------
+# BENCH_resilience.json schema
+# ---------------------------------------------------------------------------
+
+#: required keys (key -> type) shared by every resilience row
+_RESILIENCE_ROW_BASE = {"name": str, "us_per_call": _NUM, "derived": str,
+                        "mode": str}
+#: additional required keys per row family
+_RESILIENCE_RECOVERY_KEYS = {"kind": str, "round": int, "detected": bool,
+                             "recovered": bool, "recovery_s": _NUM}
+_RESILIENCE_ROW_KINDS = {
+    "resilience/guard_overhead": {"guarded_steps_per_sec": _NUM,
+                                  "unguarded_steps_per_sec": _NUM,
+                                  "overhead_ratio": _NUM, "rounds": int},
+    "resilience/chaos": {"faults": int, "problems": int, "rollbacks": int,
+                         "window_traces": int, "serve_traces": int},
+}
+_RESILIENCE_CONFIG_KEYS = ("num_users", "num_items", "emb_dim", "capacity",
+                           "micro_batch", "steps_per_round", "rounds",
+                           "seed", "overhead_gate", "fault_kinds")
+#: every fault class the chaos harness must have exercised (mirrors
+#: repro.resilience.chaos.FAULT_KINDS without importing src at gate time)
+_RESILIENCE_FAULT_KINDS = ("corrupt_ckpt", "nan_state", "stream_fault",
+                           "refresh_fail")
+
+
+def resilience_problems(path: str = RESILIENCE_JSON) -> list[str]:
+    """Schema-validate the standalone resilience artifact
+    (bench_resilience.py): config complete, one ``resilience/recovery/``
+    row per fault class with ``recovered`` true and no UNRECOVERED flag,
+    the guard-overhead row inside its gate (no GUARD_OVERHEAD flag), the
+    chaos summary row with zero harness problems, every row fully keyed and
+    mode-labeled ``native`` — an artifact claiming self-healing must show
+    every fault class actually healed."""
+    if not os.path.exists(path):
+        return [f"{path} was never written — bench_resilience did not run"]
+    with open(path) as f:
+        payload = json.load(f)
+    problems = []
+    config = payload.get("config", {})
+    for key in _RESILIENCE_CONFIG_KEYS:
+        if key not in config:
+            problems.append(f"{path} config is missing {key!r}")
+    rows = payload.get("rows", [])
+    if not rows:
+        problems.append(f"{path} has no rows")
+    recovery_kinds = set()
+    for i, row in enumerate(rows):
+        name = str(row.get("name", ""))
+        who = f"{path} row {i} ({name!r})"
+        spec = dict(_RESILIENCE_ROW_BASE)
+        if name.startswith("resilience/recovery/"):
+            spec.update(_RESILIENCE_RECOVERY_KEYS)
+        elif name in _RESILIENCE_ROW_KINDS:
+            spec.update(_RESILIENCE_ROW_KINDS[name])
+        else:
+            problems.append(f"{who}: unrecognized row family (expected "
+                            "resilience/recovery/*, "
+                            "resilience/guard_overhead or resilience/chaos)")
+        for key, types in sorted(spec.items()):
+            if key not in row:
+                problems.append(f"{who}: missing required key {key!r}")
+            elif not _typed(row[key], types):
+                problems.append(f"{who}: key {key!r} has "
+                                f"{type(row[key]).__name__} value "
+                                f"{row[key]!r}, expected {types}")
+        mode = row.get("mode")
+        if mode is not None and mode not in MODES:
+            problems.append(f"{who}: mode={mode!r} not in {MODES}")
+        elif mode is not None and mode != "native":
+            # the resilience path is plain jitted XLA — no pallas on it
+            problems.append(f"{who}: resilience rows must be mode='native' "
+                            f"(plain jitted XLA), got {mode!r}")
+        if name.startswith("resilience/recovery/"):
+            recovery_kinds.add(str(row.get("kind", "")))
+            if row.get("recovered") is not True \
+                    or "UNRECOVERED" in str(row.get("derived", "")):
+                problems.append(f"{who}: fault was not recovered — the "
+                                "self-healing claim does not hold")
+        if name == "resilience/guard_overhead" \
+                and "GUARD_OVERHEAD" in str(row.get("derived", "")):
+            problems.append(
+                f"{who}: flagged GUARD_OVERHEAD — the divergence guard "
+                f"costs more than the {config.get('overhead_gate')!r} "
+                "throughput gate allows")
+        if name == "resilience/chaos":
+            n = row.get("problems")
+            if isinstance(n, int) and not isinstance(n, bool) and n > 0:
+                problems.append(f"{who}: chaos harness reported {n} "
+                                "problem(s) (see the suite's stderr)")
+    missing = [k for k in _RESILIENCE_FAULT_KINDS
+               if k not in recovery_kinds]
+    if missing:
+        problems.append(f"{path}: fault classes with no recovery row: "
+                        f"{missing} — the chaos run did not exercise them")
+    return problems
+
+
 def main() -> int:
     problems = (run_problems() + backends_problems() + serving_problems()
-                + streaming_problems())
+                + streaming_problems() + resilience_problems())
     for p in problems:
         print(f"bench-gate: {p}", file=sys.stderr)
     if problems:
@@ -341,7 +461,9 @@ def main() -> int:
     print("bench-gate: all suites ok, loop/ rows regression-free, shard/ "
           "rows present, serve/ rows present, schema-valid and unflagged, "
           "stream/ rows present with the freshness SLO inside its gate, "
-          "backends matrix complete and mode-labeled")
+          "resilience/ rows present with every fault class recovered and "
+          "the guard inside its overhead gate, backends matrix complete "
+          "and mode-labeled")
     return 0
 
 

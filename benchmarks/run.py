@@ -20,8 +20,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_aggregation, bench_backends,
                             bench_breakdown, bench_epoch_time, bench_memory,
-                            bench_scaling, bench_serving, bench_streaming,
-                            bench_tiling, common)
+                            bench_resilience, bench_scaling, bench_serving,
+                            bench_streaming, bench_tiling, common)
     print("name,us_per_call,derived")
     suites = [
         ("epoch_time(fig6/7)", bench_epoch_time.run),
@@ -35,6 +35,7 @@ def main() -> None:
         ("backends(engine-matrix)", bench_backends.run),
         ("serving(latency/qps)", bench_serving.run),
         ("streaming(freshness)", bench_streaming.run),
+        ("resilience(chaos)", bench_resilience.run),
     ]
     failures = []
     results = {}

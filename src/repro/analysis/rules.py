@@ -108,6 +108,14 @@ RULES: dict[str, tuple[str, str]] = {
         "contract).  Clock on the host at dispatch edges and pass times "
         "in as array arguments (stream/sources.py ships event times "
         "this way)."),
+    "HL109": (
+        "no swallowed exceptions in src/ service code",
+        "An `except: pass` in service code is how degraded states go "
+        "unnoticed: a failed refresh, a corrupt checkpoint, or a stream "
+        "fault disappears instead of being counted, logged, or converted "
+        "into a health status — the silent-fault anti-pattern the "
+        "resilience layer exists to eliminate.  Handle the error (log it, "
+        "count it, degrade explicitly) or let it propagate."),
 }
 
 #: wall-clock entry points flagged by HL108 when called in traced code.
@@ -313,6 +321,8 @@ class ModuleLinter:
                 self._check_jit_donation_decorator(node)
             elif isinstance(node, (ast.For, ast.While)) and not in_tests:
                 self._check_loop_host_sync(node)
+            elif isinstance(node, ast.ExceptHandler) and in_src:
+                self._check_swallowed_exception(node)
         return self.violations
 
     # HL101 / HL102 ---------------------------------------------------------
@@ -507,6 +517,29 @@ class ModuleLinter:
                      "salted (breaks (seed, step) restart purity) and tuple "
                      "hashes are an undocumented derivation; use zlib.crc32 "
                      "or np.random.default_rng((seed, step))")
+
+    # HL109 -----------------------------------------------------------------
+
+    def _check_swallowed_exception(self, handler: ast.ExceptHandler) -> None:
+        """Flag handlers whose entire body is ``pass`` / ``...`` (optionally
+        after a bare string "explanation"): the exception is discarded
+        without logging, counting, re-raising, or any state change."""
+        def _inert(st: ast.stmt) -> bool:
+            # pass / ... / a bare string ("comment in disguise")
+            return isinstance(st, ast.Pass) or (
+                isinstance(st, ast.Expr)
+                and isinstance(st.value, ast.Constant)
+                and (st.value.value is Ellipsis
+                     or isinstance(st.value.value, str)))
+
+        if all(_inert(st) for st in handler.body):
+            what = (self.aliases.qual(handler.type)
+                    if handler.type is not None else "everything")
+            self._report("HL109", handler,
+                         f"except clause swallows {what or 'the exception'} "
+                         "with a bare pass — a silent fault handler hides "
+                         "degraded states; log/count the failure, degrade "
+                         "explicitly, or let it propagate")
 
     # HL107 -----------------------------------------------------------------
 

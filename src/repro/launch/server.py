@@ -27,7 +27,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,7 +63,8 @@ class BatchingRecommender:
                  item_chunk: Optional[int] = None,
                  exclude_mask: Optional[jax.Array] = None,
                  refresh_centroids: bool = True,
-                 warmup: bool = True):
+                 warmup: bool = True,
+                 log: Optional[Callable[[str], None]] = None):
         if pruner not in ("exact", "tile"):
             raise ValueError(f"pruner must be 'exact' or 'tile', got {pruner!r}")
         if pruner == "tile" and index is None:
@@ -82,6 +83,13 @@ class BatchingRecommender:
         self.trace_counter = TraceCounter("batching_recommender", budget=1)
         self._device_calls = 0
         self._requests_served = 0
+        self._log = log or (lambda *_: None)
+        # degraded-serving health: a failed refresh keeps the previous
+        # snapshot live and is *counted*, never swallowed silently
+        self._refreshes = 0
+        self._refresh_failures = 0
+        self._stale_refreshes = 0
+        self._last_refresh_error: Optional[str] = None
 
         def _recommend(params: mf.MFParams, index: Optional[rtv.RetrievalIndex],
                        user_ids: jax.Array) -> jax.Array:
@@ -99,6 +107,12 @@ class BatchingRecommender:
 
         self._fn = jax.jit(self.trace_counter.wrap(_recommend))
         self._params = state.params
+        # the compiled program is shape/dtype-keyed: a refresh that changed
+        # either would retrace (or serve garbage), so pin the spec now and
+        # reject non-conforming refreshes instead of degrading silently
+        self._table_specs = tuple(
+            (tuple(t.shape), jnp.dtype(t.dtype))
+            for t in (state.params.user_table, state.params.item_table))
         self._index = (rtv.refresh_index(index, state.params.item_table,
                                          similarity=similarity)
                        if (index is not None and refresh_centroids)
@@ -135,7 +149,19 @@ class BatchingRecommender:
     def stats(self) -> dict:
         return {"device_calls": self._device_calls,
                 "requests_served": self._requests_served,
-                "traces": self.trace_counter.count}
+                "traces": self.trace_counter.count,
+                **self.health}
+
+    @property
+    def health(self) -> dict:
+        """Serving health/staleness status.  ``degraded`` means the last
+        refresh(es) failed and requests are served from the previous good
+        snapshot; the status recovers on the next good refresh."""
+        return {"status": "degraded" if self._stale_refreshes else "ok",
+                "refreshes": self._refreshes,
+                "refresh_failures": self._refresh_failures,
+                "stale_refreshes": self._stale_refreshes,
+                "last_refresh_error": self._last_refresh_error}
 
     def recommend_many(self, user_ids) -> np.ndarray:
         """Synchronous batched entry point (bench/offline use): pads the
@@ -203,7 +229,20 @@ class BatchingRecommender:
 
     # -- online refresh ----------------------------------------------------
 
-    def refresh_from(self, state: mf.MFState) -> None:
+    def _validate_refresh(self, state: mf.MFState) -> None:
+        params = state.params
+        for t, (shape, dtype), label in zip(
+                (params.user_table, params.item_table),
+                self._table_specs, ("user", "item")):
+            got = (tuple(t.shape), jnp.dtype(t.dtype))
+            if got != (shape, dtype):
+                raise ValueError(
+                    f"refresh {label} table is {got[0]}/{got[1]}, the "
+                    f"serving program was compiled for {shape}/{dtype} — "
+                    "refusing the swap (it would retrace or serve garbage)")
+
+    def refresh_from(self, state: mf.MFState, *,
+                     on_error: str = "degrade") -> bool:
         """Swap in a (newly trained) ``MFState``'s tables.
 
         The jitted program takes the tables as arguments, so this is a
@@ -212,12 +251,41 @@ class BatchingRecommender:
         the centroids are re-derived from the live table on device
         (``refresh_index``); the member partition is kept, so every
         compiled program stays valid.
+
+        A failed refresh (malformed state, index refresh error) does NOT
+        take serving down: with ``on_error="degrade"`` (the default) the
+        previous snapshot stays live, the failure is logged + counted in
+        :attr:`health`, and the status recovers on the next good refresh;
+        ``on_error="raise"`` propagates instead (strict callers/tests).
+        Returns True when the swap happened.
         """
+        if on_error not in ("degrade", "raise"):
+            raise ValueError(f"on_error must be 'degrade' or 'raise', "
+                             f"got {on_error!r}")
+        try:
+            self._validate_refresh(state)
+            new_index = (rtv.refresh_index(self._index,
+                                           state.params.item_table,
+                                           similarity=self._similarity)
+                         if (self._index is not None
+                             and self._refresh_centroids)
+                         else self._index)
+        except Exception as e:  # noqa: BLE001 — degraded serving, by design
+            if on_error == "raise":
+                raise
+            self._refresh_failures += 1
+            self._stale_refreshes += 1
+            self._last_refresh_error = f"{type(e).__name__}: {e}"
+            self._log(f"[serve] refresh failed ({self._last_refresh_error});"
+                      " serving the previous snapshot "
+                      f"(stale x{self._stale_refreshes})")
+            return False
         self._params = state.params
-        if self._index is not None and self._refresh_centroids:
-            self._index = rtv.refresh_index(self._index,
-                                            state.params.item_table,
-                                            similarity=self._similarity)
+        self._index = new_index
+        self._refreshes += 1
+        self._stale_refreshes = 0
+        self._last_refresh_error = None
+        return True
 
     def stop(self) -> None:
         if self._running:

@@ -1,0 +1,20 @@
+"""Self-healing layer: divergence guard, stream retry, chaos harness.
+
+Detection + recovery for every fault class the streaming service can hit:
+checkpoint corruption (``repro.train.checkpoint`` verify/quarantine/
+fallback), numerical divergence (:class:`DivergenceGuard` + rollback with
+a salted restart window), transient stream faults (:class:`RetryingStream`
+over any :class:`~repro.stream.sources.InteractionStream`), and degraded
+serving (``BatchingRecommender.refresh_from`` keeps the previous snapshot
+live).  :mod:`repro.resilience.chaos` proves all four end to end against a
+live service on a seeded fault schedule.
+"""
+from repro.resilience.guard import (DivergenceError, DivergenceGuard,
+                                    GuardConfig)
+from repro.resilience.streams import (FlakyStream, RetryingStream,
+                                      TransientStreamError)
+
+__all__ = [
+    "DivergenceError", "DivergenceGuard", "GuardConfig",
+    "FlakyStream", "RetryingStream", "TransientStreamError",
+]

@@ -1,0 +1,132 @@
+"""Divergence guard: window-edge finite/spike checks on loss and tables.
+
+Numerical blowups (a bad batch, an over-large lr, a poisoned ingest) do not
+announce themselves: a NaN row silently propagates through every subsequent
+window, into the checkpoint, and out the serving path.  The guard makes the
+*round edge* — where the service already syncs the window's loss array back
+to the host — the detection point:
+
+* **loss checks** ride the existing bulk readback for free: finiteness,
+  an absolute ceiling, and a spike test against a running (EMA) reference;
+* **table checks** are one tiny jitted program per round
+  (``_stats_jit``: all-finite flags + max row norms, a (4,)-vector
+  readback), so there is no per-step sync and the trace budget of the
+  training window itself is untouched.
+
+On trip the :class:`~repro.stream.service.StreamingTrainer` rolls back to
+the last good checkpoint and *skips past the poison window* by salting the
+window's start step — the (seed, step) batch/rng derivation then draws a
+disjoint step range, so the replayed round cannot re-lose the same race
+(property-tested in tests/test_resilience.py, like PR 8's crash resume).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.sanitize import TraceCounter
+
+
+class DivergenceError(RuntimeError):
+    """The divergence guard tripped: training state is poisoned."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Window-edge divergence thresholds.
+
+    The defaults are deliberately loose — orders of magnitude above any
+    healthy CCL trajectory in this repo — because a guard that false-trips
+    costs a full rollback + replay; the spike test is the tight one and it
+    is *relative* (vs the run's own EMA reference)."""
+
+    max_loss: float = 1e4           # absolute per-step loss ceiling
+    spike_factor: float = 100.0     # round mean vs running EMA reference
+    ema_decay: float = 0.9          # EMA weight on the previous reference
+    max_table_norm: float = 1e3     # max embedding row L2 norm
+
+
+#: table-stat program: one trace per (table shapes, dtype), checked in tests
+GUARD_TRACES = TraceCounter("divergence_guard.stats")
+
+
+def _stats_impl(user_table, item_table):
+    """(4,) f32 vector: [user finite, item finite, max user row norm,
+    max item row norm] — a single small readback per round."""
+    return jnp.stack([
+        jnp.all(jnp.isfinite(user_table)).astype(jnp.float32),
+        jnp.all(jnp.isfinite(item_table)).astype(jnp.float32),
+        jnp.sqrt(jnp.max(jnp.sum(user_table * user_table, axis=-1))),
+        jnp.sqrt(jnp.max(jnp.sum(item_table * item_table, axis=-1))),
+    ])
+
+
+_stats_jit = jax.jit(GUARD_TRACES.wrap(_stats_impl))
+
+
+class DivergenceGuard:
+    """Stateful window-edge divergence detector.
+
+    ``check(params, window)`` returns ``None`` when the round is healthy
+    (and folds its mean loss into the EMA reference) or a human-readable
+    trip reason.  The guard is a pure function of the window/param history
+    it has seen, so two identical trajectories trip identically —
+    the rollback property tests depend on that.
+    """
+
+    def __init__(self, cfg: Optional[GuardConfig] = None):
+        self.cfg = cfg or GuardConfig()
+        self._loss_ref: Optional[float] = None
+        self.checks = 0
+        self.trips = 0
+        self.last_trip: Optional[str] = None
+
+    def check(self, params, window) -> Optional[str]:
+        """``params``: an ``mf.MFParams``; ``window``: the round's host loss
+        array (the bulk readback the driver already does)."""
+        self.checks += 1
+        cfg = self.cfg
+        w = np.asarray(window, np.float64)
+        reason = None
+        if w.size and not np.all(np.isfinite(w)):
+            bad = int(np.argmax(~np.isfinite(w)))
+            reason = f"non-finite loss at window offset {bad}"
+        elif w.size and float(np.max(np.abs(w))) > cfg.max_loss:
+            reason = (f"loss {float(np.max(np.abs(w))):.3g} above the "
+                      f"absolute ceiling {cfg.max_loss:.3g}")
+        elif (self._loss_ref is not None and w.size
+              and float(np.mean(np.abs(w)))
+              > cfg.spike_factor * max(self._loss_ref, 1e-6)):
+            reason = (f"loss spiked to {float(np.mean(np.abs(w))):.3g} "
+                      f"({cfg.spike_factor:.0f}x over the running reference "
+                      f"{self._loss_ref:.3g})")
+        else:
+            stats = np.asarray(_stats_jit(params.user_table,
+                                          params.item_table))
+            if stats[0] < 1.0:
+                reason = "non-finite values in the user table"
+            elif stats[1] < 1.0:
+                reason = "non-finite values in the item table"
+            elif float(np.max(stats[2:])) > cfg.max_table_norm:
+                reason = (f"embedding row norm {float(np.max(stats[2:])):.3g}"
+                          f" above the ceiling {cfg.max_table_norm:.3g}")
+        if reason is not None:
+            self.trips += 1
+            self.last_trip = reason
+            return reason
+        if w.size:
+            mean = float(np.mean(np.abs(w)))
+            self._loss_ref = (mean if self._loss_ref is None else
+                              cfg.ema_decay * self._loss_ref
+                              + (1.0 - cfg.ema_decay) * mean)
+        return None
+
+    def reset(self) -> None:
+        """Forget the EMA reference (called on rollback: the replayed rounds
+        rebuild it exactly as a restarted process would, keeping in-process
+        rollback and process-restart trajectories identical)."""
+        self._loss_ref = None

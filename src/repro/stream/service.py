@@ -43,6 +43,7 @@ from repro.analysis.sanitize import TraceCounter
 from repro.core import mf
 from repro.core.engine import StepEngine, resolve_engine
 from repro.data import pipeline
+from repro.resilience.guard import DivergenceError, DivergenceGuard, GuardConfig
 from repro.stream.sources import InteractionStream
 from repro.train import checkpoint as ckpt
 from repro.train import trainer
@@ -75,6 +76,19 @@ class StreamingConfig:
     ckpt_keep: int = 3
     max_restarts: int = 2
     fail_at_event: Optional[int] = None     # crash injection (tests/demos)
+    # Divergence guard (repro.resilience.guard): window-edge finite/spike
+    # checks; None disables.  On trip the trainer rolls back to the last
+    # good checkpoint and salts the window start past the poison range.
+    guard: Optional[GuardConfig] = dataclasses.field(
+        default_factory=GuardConfig)
+    max_rollbacks: int = 2
+    poison_at_round: Optional[int] = None   # NaN injection (tests/chaos)
+
+
+#: window-start stride per rollback salt: far larger than any real run's
+#: step count, so salted step ranges never overlap the unsalted ones (and
+#: still sit comfortably inside int32 for the on-device step index).
+SALT_STRIDE = 1 << 20
 
 
 #: fresh-row initialization traces once per table shape (user + item = 2)
@@ -136,6 +150,15 @@ class StreamingTrainer:
         self.rounds = 0
         self.events = int(stream.cursor)
         self.restarts = 0
+        self.rollbacks = 0
+        # rollback salt: shifts every window's start step by salt*SALT_STRIDE
+        # so the (seed, step)-pure batch/rng derivation draws a disjoint
+        # range — the deterministic "skip past the poison window".  It is
+        # checkpointed (extra) and restored, keeping resumed trajectories
+        # bit-exact; salt=0 reproduces every pre-guard trajectory unchanged.
+        self.salt = 0
+        self.guard = (DivergenceGuard(self.scfg.guard)
+                      if self.scfg.guard is not None else None)
         self._has_data = bool(np.asarray(jnp.any(data.row_count > 0)))
         self._losses: dict[int, list] = {}
         self.last_round_stats: dict = {}
@@ -212,9 +235,13 @@ class StreamingTrainer:
             raise ValueError("the ring holds no events yet — ingest before "
                              "training (run_round() orders this correctly)")
         carry = StreamCarry(self.state, self.data)
+        # the salt offsets the window's *start* — a traced argument of the
+        # compiled window, so rollbacks change the sampled step range with
+        # zero retrace (executor trace budget stays 1)
+        base = self.step + self.salt * SALT_STRIDE
         carry, window, length = trainer.run_window(
-            self.executor, carry, self.step,
-            self.step + self.scfg.steps_per_round)
+            self.executor, carry, base,
+            base + self.scfg.steps_per_round)
         self.state, self.data = carry.state, carry.data
         self.step += length
         self._losses[self.rounds] = window.tolist()
@@ -240,6 +267,21 @@ class StreamingTrainer:
         self.ingest_events(batch.user_ids, batch.item_ids)
         t1 = time.perf_counter()
         window = self.train_round()
+        if (scfg.poison_at_round is not None and self.rollbacks == 0
+                and self.rounds + 1 == scfg.poison_at_round):
+            # chaos/test injection: corrupt one trained row, as a numerical
+            # blowup inside the window would (fires once, like fail_at_event)
+            params = self.state.params
+            self.state = self.state._replace(params=params._replace(
+                item_table=params.item_table.at[0, 0].set(jnp.nan)))
+        if self.guard is not None:
+            reason = self.guard.check(self.state.params, window)
+            if reason is not None:
+                # raise BEFORE refresh and BEFORE the checkpoint below:
+                # poisoned state must never reach serving or disk
+                raise DivergenceError(
+                    f"divergence guard tripped after round "
+                    f"{self.rounds + 1} (step {self.step}): {reason}")
         t2 = time.perf_counter()
         if self.recommender is not None:
             self.recommender.refresh_from(self.state)
@@ -273,6 +315,16 @@ class StreamingTrainer:
                     raise
                 self.log(f"[stream] {e} -> restoring")
                 self._restore_or_reset()
+            except DivergenceError as e:
+                self.rollbacks += 1
+                if self.rollbacks > self.scfg.max_rollbacks:
+                    raise
+                self.log(f"[stream] {e} -> rolling back and salting past "
+                         "the poison window")
+                self._restore_or_reset()
+                self.salt += 1      # skip the poisoned (seed, step) range
+                if self.guard is not None:
+                    self.guard.reset()
         return self.rounds - start
 
     # -- checkpoint / resume -------------------------------------------------
@@ -282,7 +334,8 @@ class StreamingTrainer:
                   {"state": self.state, "data": self.data},
                   extra={"cursor": int(self.stream.cursor),
                          "step": int(self.step),
-                         "events": int(self.events)},
+                         "events": int(self.events),
+                         "salt": int(self.salt)},
                   keep=self.scfg.ckpt_keep)
 
     def _template(self):
@@ -305,6 +358,7 @@ class StreamingTrainer:
         self.rounds = int(rounds)
         self.step = int(extra["step"])
         self.events = int(extra["events"])
+        self.salt = int(extra.get("salt", 0))
         self.stream.seek(int(extra["cursor"]))
         self._has_data = bool(np.asarray(jnp.any(self.data.row_count > 0)))
         self._losses = {r: v for r, v in self._losses.items()
@@ -316,8 +370,13 @@ class StreamingTrainer:
     def _restore_or_reset(self) -> None:
         if self.scfg.ckpt_dir and \
                 ckpt.latest_step(self.scfg.ckpt_dir) is not None:
-            self.restore()
-            return
+            try:
+                self.restore()
+                return
+            except FileNotFoundError as e:
+                # every on-disk checkpoint failed verification (and was
+                # quarantined) — fall through to the cold-replay path
+                self.log(f"[stream] {e} -> no valid checkpoint")
         if not self._cold_start:
             raise RuntimeError(
                 "crashed before the first checkpoint of a warm-started "
@@ -331,6 +390,7 @@ class StreamingTrainer:
         self.step = 0
         self.rounds = 0
         self.events = 0
+        self.salt = 0
         self._has_data = False
         self._losses = {}
         self.stream.seek(0)

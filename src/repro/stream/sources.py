@@ -153,16 +153,33 @@ class SyntheticStream:
         return batch
 
 
+class DeadLetter(NamedTuple):
+    """One malformed log line skipped by a tolerant :class:`ReplayLogStream`."""
+
+    lineno: int     # 1-based line number in the source file
+    line: str       # the offending line, verbatim (stripped)
+    error: str      # why it failed to parse
+
+
 class ReplayLogStream:
     """Replays a JSONL event log (one ``{"u", "v", "t"}`` object per line).
 
     The whole log is loaded into arrays at construction (these logs are
     bounded test/replay artifacts, not production firehoses), so seeking is
     an index assignment and batches are slices.
+
+    ``strict=True`` (the default) hard-fails on the first malformed line —
+    a *recorded* log is supposed to be perfect, and silently dropping events
+    would break bit-exact replay.  ``strict=False`` is for salvaging a
+    damaged log: malformed lines are skipped into :attr:`dead_letters`
+    (line numbers preserved) and counted, so the operator sees exactly what
+    was lost instead of the whole service going down on one torn line.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, strict: bool = True):
         self.path = path
+        self.strict = bool(strict)
+        self.dead_letters: list[DeadLetter] = []
         users, items, times = [], [], []
         with open(path, encoding="utf-8") as f:
             for lineno, line in enumerate(f):
@@ -171,17 +188,27 @@ class ReplayLogStream:
                     continue
                 try:
                     ev = json.loads(line)
-                    users.append(int(ev["u"]))
-                    items.append(int(ev["v"]))
-                    times.append(float(ev.get("t", 0.0)))
-                except (ValueError, KeyError) as e:
-                    raise ValueError(
-                        f"{path}:{lineno + 1}: bad event line {line!r}: {e}"
-                    ) from e
+                    # parse every field BEFORE appending any — a half-parsed
+                    # line must not leave the columns unbalanced
+                    u, v, t = int(ev["u"]), int(ev["v"]), float(ev.get("t", 0.0))
+                    users.append(u)
+                    items.append(v)
+                    times.append(t)
+                except (ValueError, KeyError, TypeError) as e:
+                    if self.strict:
+                        raise ValueError(
+                            f"{path}:{lineno + 1}: bad event line "
+                            f"{line!r}: {e}") from e
+                    self.dead_letters.append(
+                        DeadLetter(lineno + 1, line, str(e)))
         self._users = np.asarray(users, np.int32)
         self._items = np.asarray(items, np.int32)
         self._times = np.asarray(times, np.float64)
         self._cursor = 0
+
+    @property
+    def dead_letter_count(self) -> int:
+        return len(self.dead_letters)
 
     @property
     def total(self) -> int:

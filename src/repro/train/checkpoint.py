@@ -1,16 +1,25 @@
-"""Mesh-agnostic checkpointing with atomic commits and elastic restore.
+"""Mesh-agnostic checkpointing with atomic commits, integrity verification,
+and elastic restore.
 
 Layout:  <dir>/step_<N>/
-            manifest.json     {step, leaf paths, shapes, dtypes, mesh, extra}
+            manifest.json     {step, leaf paths, shapes, dtypes, crc32, extra}
             <leaf>.npy        one file per pytree leaf (unsharded logical view)
 
 Design points (DESIGN.md §5):
   - **Atomic**: written to ``step_<N>.tmp`` then os.rename'd — a crash leaves
     either the previous checkpoint or a complete new one, never a torn state.
+    ``save`` sweeps orphaned ``.tmp`` dirs from earlier crashes before writing.
+  - **Verified**: the manifest records a CRC32 and byte size per leaf file;
+    :func:`verify_step` detects truncation, bit rot, and missing files without
+    deserializing anything.  ``restore(step=None)`` walks newest-first,
+    **quarantines** corrupt checkpoints (``step_N`` -> ``step_N.corrupt``) and
+    falls back to the newest *valid* one instead of crashing on the newest.
   - **Mesh-agnostic / elastic**: leaves are stored as full logical arrays;
     ``restore`` lays them out for *whatever* mesh/sharding the restarted job
     uses (shrunk/grown cluster, different model-parallel degree).
-  - **Retention**: keep the last ``keep`` checkpoints.
+  - **Retention**: keep the last ``keep`` checkpoints, counting only
+    *verified* ones — retention can never delete the last good state just
+    because newer (corrupt) step dirs exist.
   - Multi-host note: this runs single-process (one host owns the full logical
     view).  On a real pod each host would write its addressable shards with
     the same manifest format; the restore path is unchanged.
@@ -21,10 +30,15 @@ import json
 import os
 import re
 import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """An explicitly requested checkpoint failed integrity verification."""
 
 
 def _json_default(obj):
@@ -58,9 +72,33 @@ def _key_str(k) -> str:
     return str(k)
 
 
+def _crc32_file(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while block := f.read(chunk):
+            crc = zlib.crc32(block, crc)
+    return crc & 0xFFFFFFFF
+
+
+def sweep_tmp(ckpt_dir: str) -> list[str]:
+    """Remove orphaned ``step_*.tmp`` dirs left by a crashed writer; returns
+    the removed names.  Safe to call any time: a ``.tmp`` dir is by
+    definition uncommitted (the atomic rename never happened), so nothing of
+    value can live there."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    removed = []
+    for d in sorted(os.listdir(ckpt_dir)):
+        if re.fullmatch(r"step_\d+\.tmp", d):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+            removed.append(d)
+    return removed
+
+
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
          keep: int = 3) -> str:
     """Write checkpoint atomically; returns the committed path."""
+    sweep_tmp(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -75,10 +113,12 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
         if arr.dtype.isbuiltin != 1:       # ml_dtypes (bf16, ...) -> store f32
             arr = arr.astype(np.float32)
         fname = name.replace("/", "__") + ".npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
         manifest["leaves"].append(
             {"name": name, "file": fname, "shape": list(arr.shape),
-             "dtype": dtype_name})
+             "dtype": dtype_name, "bytes": os.path.getsize(fpath),
+             "crc32": _crc32_file(fpath)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1, default=_json_default)
     if os.path.exists(final):
@@ -88,25 +128,124 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _steps(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                  if (m := re.fullmatch(r"step_(\d+)", d)))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def verify(path: str) -> list[str]:
+    """Integrity problems of one committed checkpoint dir (empty = valid):
+    manifest readable, every leaf file present with the recorded byte size
+    and CRC32.  Pre-checksum manifests (no ``crc32`` key) only get the
+    existence check — they predate the integrity contract."""
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.isdir(path):
+        return [f"{path}: not a directory"]
+    if not os.path.exists(mpath):
+        return [f"{path}: manifest.json is missing"]
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (ValueError, OSError) as e:
+        return [f"{path}: manifest.json unreadable: {e}"]
+    problems = []
+    for leaf in manifest.get("leaves", []):
+        fpath = os.path.join(path, leaf["file"])
+        if not os.path.exists(fpath):
+            problems.append(f"{path}: leaf file {leaf['file']!r} is missing")
+            continue
+        if "bytes" in leaf and os.path.getsize(fpath) != leaf["bytes"]:
+            problems.append(
+                f"{path}: leaf {leaf['file']!r} is {os.path.getsize(fpath)} "
+                f"bytes, manifest says {leaf['bytes']} (truncated?)")
+            continue
+        if "crc32" in leaf and _crc32_file(fpath) != leaf["crc32"]:
+            problems.append(
+                f"{path}: leaf {leaf['file']!r} fails its CRC32 "
+                "(bit rot / torn write)")
+    return problems
+
+
+def verify_step(ckpt_dir: str, step: int) -> list[str]:
+    return verify(os.path.join(ckpt_dir, f"step_{step:08d}"))
+
+
+def valid_steps(ckpt_dir: str) -> list[int]:
+    """Ascending steps whose checkpoints pass :func:`verify`."""
+    return [s for s in _steps(ckpt_dir) if not verify_step(ckpt_dir, s)]
+
+
+def latest_valid_step(ckpt_dir: str) -> Optional[int]:
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def quarantine(ckpt_dir: str, step: int) -> str:
+    """Move a corrupt ``step_N`` dir aside as ``step_N.corrupt[.K]`` so the
+    newest-first restore scan never reconsiders it (and a human can still
+    autopsy the bytes); returns the quarantine path."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    dst = src + ".corrupt"
+    k = 0
+    while os.path.exists(dst):
+        k += 1
+        dst = f"{src}.corrupt.{k}"
+    os.rename(src, dst)
+    return dst
 
 
 def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
             shardings: Optional[Any] = None):
     """Restore into the structure of ``target``.
 
+    ``step=None`` walks the committed checkpoints newest-first, verifying
+    each: corrupt ones are quarantined (never silently selected) and the
+    newest *valid* one is loaded; ``FileNotFoundError`` if none survive.
+    An explicit ``step`` is strict: a missing dir raises a
+    ``FileNotFoundError`` naming the available steps, a corrupt one raises
+    :class:`CheckpointCorruptError` (no silent fallback when the caller
+    asked for a specific state).
+
     ``shardings``: optional pytree of (Named)Shardings — leaves are
     device_put with them, implementing elastic resharding onto the current
     mesh.  Returns (tree, step, extra).
     """
-    step = latest_step(ckpt_dir) if step is None else step
     if step is None:
-        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        candidates = _steps(ckpt_dir)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        step = None
+        for s in reversed(candidates):
+            if verify_step(ckpt_dir, s):
+                quarantine(ckpt_dir, s)
+                continue
+            step = s
+            break
+        if step is None:
+            raise FileNotFoundError(
+                f"no valid checkpoint under {ckpt_dir}: all "
+                f"{len(candidates)} candidate(s) failed verification and "
+                "were quarantined as step_*.corrupt")
+    else:
+        path = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if not os.path.isdir(path):
+            avail = _steps(ckpt_dir)
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found under {ckpt_dir} "
+                f"(available steps: {avail if avail else 'none'})")
+        problems = verify(path)
+        if problems:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} failed verification: "
+                + "; ".join(problems))
+
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -129,7 +268,17 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
 
 
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
-                   if (m := re.fullmatch(r"step_(\d+)", d)))
-    for s in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    """Retention over *verified* checkpoints only: delete steps strictly
+    older than the keep-th-newest valid one.  With fewer than ``keep`` valid
+    checkpoints nothing is deleted — a run whose recent saves are corrupt
+    keeps its last good state no matter how stale it is."""
+    if keep <= 0:
+        return
+    valid = valid_steps(ckpt_dir)
+    if len(valid) < keep:
+        return
+    cutoff = valid[-keep]
+    for s in _steps(ckpt_dir):
+        if s < cutoff:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)

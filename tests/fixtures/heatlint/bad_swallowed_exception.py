@@ -1,0 +1,18 @@
+"""HL109 fixture: swallowed exceptions in service code (linted with a
+src/-relative path in the tests — the rule is scoped to library code)."""
+
+
+def refresh(server, state):
+    try:
+        server.refresh_from(state)
+    except Exception:       # HL109: the failure vanishes — no log, no count
+        pass
+
+
+def load_checkpoint(path):
+    try:
+        with open(path) as f:
+            return f.read()
+    except OSError:         # HL109: bare except body is only `...`
+        ...
+    return None

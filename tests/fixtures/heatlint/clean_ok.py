@@ -70,3 +70,13 @@ def timed_dispatch(window, state, start):
     t0 = time.perf_counter()
     state, losses = window(state, jnp.asarray(start, jnp.int32))
     return state, losses, time.perf_counter() - t0
+
+
+def tolerant_refresh(server, state, log, health):
+    # a handled fault is counted + logged, never silently dropped
+    # (HL109-clean)
+    try:
+        server.refresh_from(state)
+    except ValueError as e:
+        health["refresh_failures"] += 1
+        log(f"refresh failed, serving stale snapshot: {e}")

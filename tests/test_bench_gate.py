@@ -1,14 +1,16 @@
 """benchmarks/check.py artifact schema gates: a well-formed
-BENCH_serving.json / BENCH_streaming.json passes, and each class of
-malformation (missing file, missing config key, missing row key, unlabeled /
-mislabeled mode, absent default-budget / freshness row, FRESHNESS flag,
-blown trace budget) is named in the problem list."""
+BENCH_serving.json / BENCH_streaming.json / BENCH_resilience.json passes,
+and each class of malformation (missing file, missing config key, missing
+row key, unlabeled / mislabeled mode, absent default-budget / freshness /
+recovery row, FRESHNESS / UNRECOVERED / GUARD_OVERHEAD / CHAOS flag, blown
+trace budget) is named in the problem list."""
 import copy
 import json
 
 import pytest
 
-from benchmarks.check import serving_problems, streaming_problems
+from benchmarks.check import (resilience_problems, serving_problems,
+                              streaming_problems)
 
 VALID = {
     "config": {"num_items": 1000, "num_users": 64, "emb_dim": 16,
@@ -214,3 +216,127 @@ def test_streaming_unknown_row_family_fails(stream_artifact):
     bad["rows"][0]["name"] = "stream/mystery"
     assert any("unrecognized row family" in p
                for p in streaming_problems(stream_artifact(bad)))
+
+
+# ---------------------------------------------------------------------------
+# BENCH_resilience.json gate
+# ---------------------------------------------------------------------------
+
+def _recovery_row(kind, rnd):
+    return {"name": f"resilience/recovery/{kind}", "us_per_call": 5e4,
+            "derived": f"round {rnd}: detection->recovered in 50.0 ms",
+            "mode": "native", "kind": kind, "round": rnd, "detected": True,
+            "recovered": True, "recovery_s": 0.05}
+
+
+RES_VALID = {
+    "config": {"num_users": 512, "num_items": 1024, "emb_dim": 32,
+               "capacity": 8, "micro_batch": 256, "steps_per_round": 32,
+               "rounds": 10, "seed": 0, "overhead_gate": 0.9,
+               "fault_kinds": ["corrupt_ckpt", "nan_state", "stream_fault",
+                               "refresh_fail"]},
+    "jax_backend": "cpu",
+    "rows": [
+        _recovery_row("corrupt_ckpt", 3),
+        _recovery_row("nan_state", 5),
+        _recovery_row("stream_fault", 7),
+        _recovery_row("refresh_fail", 8),
+        {"name": "resilience/guard_overhead", "us_per_call": 120.0,
+         "derived": "guarded 900 steps/s vs unguarded 910 steps/s (98.9%)",
+         "mode": "native", "guarded_steps_per_sec": 900.0,
+         "unguarded_steps_per_sec": 910.0, "overhead_ratio": 0.989,
+         "rounds": 10},
+        {"name": "resilience/chaos", "us_per_call": 0.0,
+         "derived": "4 faults over 10 rounds, 0 problem(s)",
+         "mode": "native", "faults": 4, "problems": 0, "rollbacks": 1,
+         "window_traces": 1, "serve_traces": 1},
+    ],
+}
+
+
+@pytest.fixture
+def res_artifact(tmp_path):
+    def write(payload):
+        p = tmp_path / "BENCH_resilience.json"
+        p.write_text(json.dumps(payload))
+        return str(p)
+    return write
+
+
+def test_resilience_valid_artifact_passes(res_artifact):
+    assert resilience_problems(res_artifact(RES_VALID)) == []
+
+
+def test_resilience_missing_file_is_a_problem(tmp_path):
+    probs = resilience_problems(str(tmp_path / "nope.json"))
+    assert len(probs) == 1 and "never written" in probs[0]
+
+
+def test_resilience_missing_config_key_fails(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    del bad["config"]["overhead_gate"]
+    assert any("overhead_gate" in p
+               for p in resilience_problems(res_artifact(bad)))
+
+
+def test_resilience_requires_every_fault_kind(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"] = [r for r in bad["rows"]
+                   if r.get("kind") != "corrupt_ckpt"]
+    probs = resilience_problems(res_artifact(bad))
+    assert any("corrupt_ckpt" in p and "no recovery row" in p for p in probs)
+
+
+def test_resilience_unrecovered_fault_fails(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"][1]["recovered"] = False
+    assert any("not recovered" in p
+               for p in resilience_problems(res_artifact(bad)))
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"][1]["derived"] += " UNRECOVERED"
+    assert any("not recovered" in p
+               for p in resilience_problems(res_artifact(bad)))
+
+
+def test_resilience_guard_overhead_flag_fails(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"][4]["derived"] = "guarded 700 vs 910 (76.9%) GUARD_OVERHEAD"
+    bad["rows"][4]["overhead_ratio"] = 0.769
+    assert any("GUARD_OVERHEAD" in p
+               for p in resilience_problems(res_artifact(bad)))
+
+
+def test_resilience_chaos_problems_fail(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"][5]["problems"] = 3
+    assert any("3 problem(s)" in p
+               for p in resilience_problems(res_artifact(bad)))
+
+
+def test_resilience_row_without_mode_or_non_native_fails(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    del bad["rows"][0]["mode"]
+    assert any("'mode'" in p
+               for p in resilience_problems(res_artifact(bad)))
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"][4]["mode"] = "interpret"
+    assert any("must be mode='native'" in p
+               for p in resilience_problems(res_artifact(bad)))
+
+
+def test_resilience_missing_row_key_and_wrong_type_fail(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    del bad["rows"][0]["recovery_s"]
+    assert any("'recovery_s'" in p
+               for p in resilience_problems(res_artifact(bad)))
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"][0]["detected"] = "yes"
+    assert any("'detected'" in p
+               for p in resilience_problems(res_artifact(bad)))
+
+
+def test_resilience_unknown_row_family_fails(res_artifact):
+    bad = copy.deepcopy(RES_VALID)
+    bad["rows"][0]["name"] = "resilience/mystery"
+    assert any("unrecognized row family" in p
+               for p in resilience_problems(res_artifact(bad)))

@@ -1,10 +1,16 @@
-"""Checkpointing: atomic commits, retention, restore fidelity, elastic layout."""
+"""Checkpointing: atomic commits, retention, restore fidelity, elastic
+layout, and the integrity contract (checksums, quarantine, valid fallback)."""
+import json
 import os
+import shutil
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.train import checkpoint as ckpt
 
@@ -59,3 +65,116 @@ def test_elastic_restore_with_sharding(tmp_path):
 def test_restore_missing_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         ckpt.restore(str(tmp_path / "nope"), _tree())
+
+
+# ---------------------------------------------------------------------------
+# integrity: checksums, quarantine, fallback-to-valid, verified retention
+# ---------------------------------------------------------------------------
+
+CORRUPTIONS = ("truncate", "bitflip", "del_manifest", "del_leaf")
+
+
+def _corrupt(path, kind):
+    """Damage one committed checkpoint dir the way ``kind`` says."""
+    if kind == "del_manifest":
+        os.remove(os.path.join(path, "manifest.json"))
+        return
+    leaves = sorted(f for f in os.listdir(path) if f.endswith(".npy"))
+    target = os.path.join(path, leaves[0])
+    if kind == "del_leaf":
+        os.remove(target)
+    elif kind == "truncate":
+        with open(target, "r+b") as f:
+            f.truncate(os.path.getsize(target) // 2)
+    elif kind == "bitflip":
+        with open(target, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            byte = f.read(1)
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([byte[0] ^ 0xFF]))
+
+
+def test_manifest_carries_per_leaf_checksums(tmp_path):
+    path = ckpt.save(str(tmp_path), 1, _tree())
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["leaves"], "manifest has no leaves"
+    for leaf in manifest["leaves"]:
+        assert isinstance(leaf["crc32"], int)
+        assert leaf["bytes"] == os.path.getsize(
+            os.path.join(path, leaf["file"]))
+    assert ckpt.verify_step(str(tmp_path), 1) == []
+    assert ckpt.valid_steps(str(tmp_path)) == [1]
+
+
+def test_save_sweeps_orphaned_tmp_dirs(tmp_path):
+    orphan = tmp_path / "step_00000009.tmp"
+    orphan.mkdir()
+    (orphan / "params__w.npy").write_bytes(b"torn")
+    ckpt.save(str(tmp_path), 1, _tree())
+    assert not orphan.exists()
+    assert sorted(d for d in os.listdir(tmp_path)
+                  if d.endswith(".tmp")) == []
+
+
+def test_restore_explicit_missing_step_names_available(tmp_path):
+    ckpt.save(str(tmp_path), 3, _tree())
+    with pytest.raises(FileNotFoundError, match=r"step 7.*available.*3"):
+        ckpt.restore(str(tmp_path), _tree(), step=7)
+
+
+def test_restore_explicit_corrupt_step_raises(tmp_path):
+    path = ckpt.save(str(tmp_path), 3, _tree())
+    _corrupt(path, "bitflip")
+    with pytest.raises(ckpt.CheckpointCorruptError, match="step 3"):
+        ckpt.restore(str(tmp_path), _tree(), step=3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(kind=st.sampled_from(CORRUPTIONS))
+def test_restore_quarantines_and_falls_back(kind):
+    """Property: whatever way the newest checkpoint is damaged, restore
+    never selects it — it is quarantined and the previous step's exact
+    values come back."""
+    d = tempfile.mkdtemp(prefix="heat_ckpt_corrupt_")
+    try:
+        for s in (1, 2, 3):
+            ckpt.save(d, s, _tree(seed=s))
+        _corrupt(os.path.join(d, "step_00000003"), kind)
+        restored, step, _ = ckpt.restore(d, _tree(seed=0))
+        assert step == 2
+        for a, b in zip(jax.tree.leaves(_tree(seed=2)),
+                        jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+        names = os.listdir(d)
+        assert "step_00000003" not in names
+        assert any(n.startswith("step_00000003.corrupt") for n in names)
+        # the quarantined dir is terminal: a second restore still lands on 2
+        _, step, _ = ckpt.restore(d, _tree(seed=0))
+        assert step == 2
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_restore_all_corrupt_raises_with_count(tmp_path):
+    for s in (1, 2):
+        _corrupt(ckpt.save(str(tmp_path), s, _tree(seed=s)), "bitflip")
+    with pytest.raises(FileNotFoundError, match="2 candidate"):
+        ckpt.restore(str(tmp_path), _tree())
+    names = os.listdir(tmp_path)
+    assert sum(1 for n in names if ".corrupt" in n) == 2
+
+
+def test_gc_counts_only_verified_checkpoints(tmp_path):
+    """Retention must never delete the last good state just because newer
+    (corrupt) step dirs pad the count."""
+    for s in (1, 2, 3):
+        ckpt.save(str(tmp_path), s, _tree(seed=s), keep=3)
+    for s in (2, 3):
+        _corrupt(str(tmp_path / f"step_{s:08d}"), "bitflip")
+    ckpt.save(str(tmp_path), 4, _tree(seed=4), keep=2)
+    assert (tmp_path / "step_00000001").is_dir()   # last good below cutoff
+    assert ckpt.latest_valid_step(str(tmp_path)) == 4
+    _, step, _ = ckpt.restore(str(tmp_path), _tree())
+    assert step == 4

@@ -102,6 +102,27 @@ def test_hl108_quiet_on_host_side_clocks():
     assert lint_source(src) == []
 
 
+def test_hl109_swallowed_exceptions_in_service_code():
+    # path-scoped: only fires under src/
+    v = _lint_fixture("bad_swallowed_exception.py",
+                      relpath="src/repro/bad_swallowed_exception.py")
+    assert _codes(v) == ["HL109"]
+    assert len(v) == 2          # `except: pass` and `except OSError: ...`
+    assert _lint_fixture("bad_swallowed_exception.py",
+                         relpath="tests/bad_swallowed_exception.py") == []
+
+
+def test_hl109_quiet_when_the_handler_acts():
+    src = textwrap.dedent("""\
+        def tolerant(server, state, log):
+            try:
+                server.refresh_from(state)
+            except Exception as e:  # noqa: BLE001
+                log(f"refresh failed: {e}")
+    """)
+    assert lint_source(src, relpath="src/repro/tolerant.py") == []
+
+
 def test_clean_fixture_is_clean_under_every_scope():
     for rel in ("src/repro/clean_ok.py", "benchmarks/clean_ok.py",
                 "examples/clean_ok.py"):

@@ -1,0 +1,304 @@
+"""The self-healing layer (repro.resilience): retrying stream semantics,
+divergence-guard detection, degraded serving, the rollback-resume
+determinism property (two identical poisoned runs heal onto the identical
+trajectory), and the chaos harness end to end."""
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mf
+from repro.launch.server import BatchingRecommender
+from repro.resilience import (DivergenceGuard, FlakyStream, GuardConfig,
+                              RetryingStream, TransientStreamError)
+from repro.resilience import guard as guard_mod
+from repro.resilience.chaos import FAULT_KINDS, make_schedule, run_chaos
+from repro.stream.service import StreamingConfig, StreamingTrainer
+from repro.stream.sources import InteractionStream, SyntheticStream
+
+USERS, ITEMS, DIM, CAP = 48, 64, 8, 4
+
+
+# ---------------------------------------------------------------------------
+# stream fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_retrying_stream_absorbs_faults_bit_exactly():
+    plain = SyntheticStream(USERS, ITEMS, seed=3, total=200)
+    flaky = FlakyStream(SyntheticStream(USERS, ITEMS, seed=3, total=200),
+                        {50: 2, 120: 1})
+    retry = RetryingStream(flaky, max_attempts=4, seed=0,
+                           sleep=lambda _: None)
+    assert isinstance(flaky, InteractionStream)
+    assert isinstance(retry, InteractionStream)
+    got, ref = [], []
+    while (b := retry.next_batch(25)) is not None:
+        got.append(b)
+    while (b := plain.next_batch(25)) is not None:
+        ref.append(b)
+    # the faults were absorbed and nothing was skipped or double-delivered
+    assert flaky.raised == 3 and retry.retries == 3 and retry.gave_up == 0
+    assert np.array_equal(np.concatenate([b.user_ids for b in got]),
+                          np.concatenate([b.user_ids for b in ref]))
+    assert np.array_equal(np.concatenate([b.item_ids for b in got]),
+                          np.concatenate([b.item_ids for b in ref]))
+
+
+def test_retry_backoff_is_seeded_and_bounded():
+    def run_once():
+        flaky = FlakyStream(SyntheticStream(USERS, ITEMS, seed=0, total=100),
+                            {10: 3})
+        retry = RetryingStream(flaky, max_attempts=5, base_delay=0.05,
+                               max_delay=0.3, seed=7, sleep=lambda _: None)
+        while retry.next_batch(20) is not None:
+            pass
+        return list(retry.delays)
+    a, b = run_once(), run_once()
+    assert a == b and len(a) == 3           # seeded jitter, not wall clock
+    for attempt, delay in enumerate(a):
+        cap = min(0.05 * 2 ** attempt, 0.3)
+        assert cap / 2 <= delay <= cap      # jitter stays in [cap/2, cap]
+
+
+def test_retrying_stream_gives_up_after_attempt_cap():
+    flaky = FlakyStream(SyntheticStream(USERS, ITEMS, seed=0, total=100),
+                        {0: 99})
+    retry = RetryingStream(flaky, max_attempts=3, sleep=lambda _: None)
+    with pytest.raises(TransientStreamError):
+        retry.next_batch(10)
+    assert retry.gave_up == 1 and retry.retries == 2
+    # a hard-down source did not corrupt the cursor: once the fault clears,
+    # delivery resumes from the exact same offset
+    flaky._remaining[0] = 0
+    assert retry.next_batch(10).start == 0
+
+
+def test_flaky_stream_fails_before_touching_the_base():
+    flaky = FlakyStream(SyntheticStream(USERS, ITEMS, seed=0, total=100),
+                        {5: 1})
+    with pytest.raises(TransientStreamError):
+        flaky.next_batch(10)
+    assert flaky.cursor == 0                # base never advanced
+    assert flaky.next_batch(10).start == 0  # one failure scheduled, then ok
+
+
+# ---------------------------------------------------------------------------
+# divergence guard
+# ---------------------------------------------------------------------------
+
+def _params():
+    cfg = mf.MFConfig(num_users=8, num_items=8, emb_dim=4)
+    return mf.init_mf(jax.random.PRNGKey(0), cfg).params
+
+
+def test_guard_passes_a_healthy_window():
+    g = DivergenceGuard()
+    assert g.check(_params(), np.full(8, 0.5)) is None
+    assert g.checks == 1 and g.trips == 0
+
+
+def test_guard_trips_on_nonfinite_loss():
+    g = DivergenceGuard()
+    w = np.full(8, 0.5)
+    w[3] = np.nan
+    assert "non-finite loss" in g.check(_params(), w)
+    assert g.trips == 1 and g.last_trip is not None
+
+
+def test_guard_trips_on_absolute_loss_ceiling():
+    g = DivergenceGuard(GuardConfig(max_loss=10.0))
+    assert "ceiling" in g.check(_params(), np.full(8, 50.0))
+
+
+def test_guard_trips_on_loss_spike_vs_ema():
+    g = DivergenceGuard(GuardConfig(spike_factor=100.0))
+    assert g.check(_params(), np.full(8, 0.5)) is None   # builds the EMA ref
+    assert "spiked" in g.check(_params(), np.full(8, 500.0))
+
+
+def test_guard_trips_on_nonfinite_table():
+    g = DivergenceGuard()
+    p = _params()
+    p = p._replace(item_table=p.item_table.at[0, 0].set(np.nan))
+    assert "item table" in g.check(p, np.full(8, 0.5))
+
+
+def test_guard_trips_on_table_norm_blowup():
+    g = DivergenceGuard()
+    p = _params()
+    p = p._replace(user_table=p.user_table * 1e6)
+    assert "row norm" in g.check(p, np.full(8, 0.5))
+
+
+def test_guard_reset_forgets_the_ema_reference():
+    g = DivergenceGuard()
+    assert g.check(_params(), np.full(8, 0.5)) is None
+    g.reset()
+    # without the reference a 1000x jump is only bounded by the abs ceiling
+    assert g.check(_params(), np.full(8, 500.0)) is None
+
+
+def test_guard_stats_program_traces_once():
+    g = DivergenceGuard()
+    p = _params()
+    before = guard_mod.GUARD_TRACES.count
+    for i in range(5):
+        g.check(p, np.full(8, 0.5 + 0.01 * i))
+    assert guard_mod.GUARD_TRACES.count - before <= 1
+
+
+# ---------------------------------------------------------------------------
+# degraded serving
+# ---------------------------------------------------------------------------
+
+def _live_service(**scfg_kw):
+    stream = SyntheticStream(USERS, ITEMS, seed=0, total=6 * 32,
+                             user_drift=0.02, item_drift=0.02)
+    cfg = mf.MFConfig(num_users=USERS, num_items=ITEMS, emb_dim=DIM,
+                      num_negatives=8, lr=0.4, backend="fused",
+                      sampler="popularity")
+    scfg = StreamingConfig(capacity=CAP, micro_batch=32, steps_per_round=8,
+                           batch_size=32, recency=0.5, seed=0, **scfg_kw)
+    trainer = StreamingTrainer(cfg, stream, scfg, log=lambda *_: None)
+    server = BatchingRecommender(trainer.state, 10, max_wait_ms=0.2)
+    trainer.recommender = server
+    return trainer, server
+
+
+def test_degraded_serving_keeps_the_previous_snapshot():
+    trainer, server = _live_service()
+    try:
+        assert trainer.run(rounds=1) == 1
+        assert server.health["status"] == "ok"
+        bad_cfg = mf.MFConfig(num_users=USERS, num_items=ITEMS,
+                              emb_dim=DIM + 1)
+        bad = mf.init_mf(jax.random.PRNGKey(1), bad_cfg)
+        assert server.refresh_from(bad) is False
+        h = server.health
+        assert h["status"] == "degraded" and h["refresh_failures"] == 1
+        assert "compiled for" in h["last_refresh_error"]
+        got = server.recommend(7)           # previous snapshot still serves
+        assert got.shape == (10,) and np.all(np.isfinite(got))
+        assert server.refresh_from(trainer.state) is True
+        h = server.health
+        assert h["status"] == "ok" and h["stale_refreshes"] == 0
+        assert server.trace_count == 1      # degradation never retraced
+    finally:
+        server.stop()
+
+
+def test_refresh_from_can_raise_instead_of_degrading():
+    trainer, server = _live_service()
+    try:
+        bad = mf.init_mf(jax.random.PRNGKey(1),
+                         mf.MFConfig(num_users=USERS, num_items=ITEMS,
+                                     emb_dim=DIM + 1))
+        with pytest.raises(ValueError):
+            server.refresh_from(bad, on_error="raise")
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# divergence rollback: deterministic resume past the poison window
+# ---------------------------------------------------------------------------
+
+def _poisoned_run(poison_round, ckpt_dir, total=6 * 32):
+    stream = SyntheticStream(USERS, ITEMS, seed=0, total=total,
+                             user_drift=0.02, item_drift=0.02)
+    cfg = mf.MFConfig(num_users=USERS, num_items=ITEMS, emb_dim=DIM,
+                      num_negatives=8, lr=0.4, backend="fused",
+                      sampler="popularity")
+    scfg = StreamingConfig(capacity=CAP, micro_batch=32, steps_per_round=8,
+                           batch_size=32, recency=0.5, seed=0,
+                           ckpt_dir=ckpt_dir, ckpt_every=1,
+                           poison_at_round=poison_round)
+    trainer = StreamingTrainer(cfg, stream, scfg, log=lambda *_: None)
+    trainer.run()
+    return trainer
+
+
+def _fingerprint(t: StreamingTrainer):
+    return {
+        "user_table": np.asarray(t.state.params.user_table),
+        "item_table": np.asarray(t.state.params.item_table),
+        "train_pos": np.asarray(t.data.train_pos),
+        "row_count": np.asarray(t.data.row_count),
+        "write_pos": np.asarray(t.data.write_pos),
+        "step": t.step, "events": t.events, "rounds": t.rounds,
+        "salt": t.salt, "rollbacks": t.rollbacks,
+    }
+
+
+@settings(max_examples=4, deadline=None)
+@given(poison_round=st.integers(2, 5))
+def test_rollback_resume_is_deterministic(poison_round):
+    """Property: wherever the poison lands, the guard trips exactly once,
+    the rollback salts past the poison window, the healed trajectory is
+    identical across two independent runs, and the compiled window never
+    retraces."""
+    d1 = tempfile.mkdtemp(prefix="heat_rollback_a_")
+    d2 = tempfile.mkdtemp(prefix="heat_rollback_b_")
+    try:
+        a = _poisoned_run(poison_round, d1)
+        b = _poisoned_run(poison_round, d2)
+        for k, v in _fingerprint(a).items():
+            assert np.array_equal(v, _fingerprint(b)[k]), f"{k} diverged"
+        assert a.rollbacks == 1 and a.salt == 1
+        assert a.rounds == 6                # every round completed post-heal
+        assert np.all(np.isfinite(np.asarray(a.state.params.item_table)))
+        assert np.all(np.isfinite(np.asarray(a.state.params.user_table)))
+        assert a.executor.trace_counter.count == 1   # salt did not retrace
+    finally:
+        shutil.rmtree(d1, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)
+
+
+def test_rollback_salt_survives_checkpoint_resume(tmp_path):
+    """A healed run's salt is part of the restart contract: a fresh process
+    restoring the checkpoint continues on the salted trajectory."""
+    a = _poisoned_run(3, str(tmp_path))
+    assert a.salt == 1
+    stream = SyntheticStream(USERS, ITEMS, seed=0, total=6 * 32,
+                             user_drift=0.02, item_drift=0.02)
+    cfg = mf.MFConfig(num_users=USERS, num_items=ITEMS, emb_dim=DIM,
+                      num_negatives=8, lr=0.4, backend="fused",
+                      sampler="popularity")
+    scfg = StreamingConfig(capacity=CAP, micro_batch=32, steps_per_round=8,
+                           batch_size=32, recency=0.5, seed=0,
+                           ckpt_dir=str(tmp_path), ckpt_every=1)
+    fresh = StreamingTrainer(cfg, stream, scfg, log=lambda *_: None)
+    fresh.restore()
+    assert fresh.salt == 1 and fresh.step == a.step
+
+
+# ---------------------------------------------------------------------------
+# chaos harness
+# ---------------------------------------------------------------------------
+
+def test_chaos_schedule_is_seeded_and_well_placed():
+    a = make_schedule(5, 12)
+    assert a == make_schedule(5, 12)
+    assert sorted(a.values()) == sorted(FAULT_KINDS)
+    assert all(2 <= r <= 11 for r in a)     # never round 1, never the last
+    assert make_schedule(6, 12) != a or True    # other seeds are legal too
+    with pytest.raises(ValueError, match="rounds >="):
+        make_schedule(0, len(FAULT_KINDS) + 2)
+
+
+def test_chaos_harness_detects_and_recovers_every_fault():
+    report = run_chaos(seed=0, rounds=8, num_users=USERS, num_items=ITEMS,
+                       emb_dim=DIM, capacity=CAP, micro_batch=32,
+                       steps_per_round=8, batch_size=32)
+    assert report["problems"] == []
+    assert {f["kind"] for f in report["faults"]} == set(FAULT_KINDS)
+    for f in report["faults"]:
+        assert f["detected"] and f["recovered"], f
+        assert f["recovery_s"] >= 0.0
+    fin = report["final"]
+    assert fin["window_traces"] == 1 and fin["serve_traces"] == 1
+    assert fin["rollbacks"] == 1 and fin["health"]["status"] == "ok"

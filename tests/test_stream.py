@@ -97,6 +97,24 @@ def test_replay_log_rejects_bad_lines(tmp_path):
         ReplayLogStream(str(path))
 
 
+def test_replay_log_tolerant_mode_dead_letters_bad_lines(tmp_path):
+    path = tmp_path / "damaged.jsonl"
+    path.write_text('{"u": 1, "v": 2, "t": 0.5}\n'
+                    '{"u": 3}\n'                          # missing "v"
+                    'not json at all\n'
+                    '{"u": 4, "v": 5, "t": 1.5}\n')
+    replay = ReplayLogStream(str(path), strict=False)
+    # the good lines replay; the damage is counted, not swallowed
+    assert replay.total == 2 and replay.dead_letter_count == 2
+    got = replay.next_batch(10)
+    assert np.array_equal(got.user_ids, [1, 4])
+    assert np.array_equal(got.item_ids, [2, 5])
+    # line numbers and verbatim lines survive for the operator's autopsy
+    assert [d.lineno for d in replay.dead_letters] == [2, 3]
+    assert replay.dead_letters[1].line == "not json at all"
+    assert all(d.error for d in replay.dead_letters)
+
+
 def test_probe_injector_splices_and_shifts():
     base = SyntheticStream(USERS, ITEMS, seed=0, total=100)
     probed = ProbeInjector(base, 40, user=5, item=9, repeat=3)
