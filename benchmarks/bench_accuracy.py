@@ -52,6 +52,17 @@ def run():
     emit("table6/HEAT-TCCL(tiled)", 0.0,
          f"recall@20={r3:.4f} ndcg@20={n3:.4f} drecall_vs_random={r3 - r1:+.4f}")
 
+    # Int8 tables (optim/quantization.py) vs the fp32 HEAT-CCL twin: same
+    # engine, steps and (seed, step) stream, only the table storage differs.
+    # |drecall| > 1% raises RECALL_DRIFT, which benchmarks.check fails on —
+    # the affordability trade is void if it costs accuracy.
+    r4, n4 = _train_eval(bench_cfg(500, 1000, table_format="int8", **base), ds)
+    drift = r4 - r1
+    flag = " RECALL_DRIFT" if abs(drift) > 0.01 else ""
+    emit("table5/HEAT-CCL(int8)", 0.0,
+         f"recall@20={r4:.4f} ndcg@20={n4:.4f} "
+         f"drecall_vs_fp32={drift:+.4f}{flag}")
+
 
 if __name__ == "__main__":
     run()

@@ -33,6 +33,7 @@ from repro.core import mf, samplers
 from repro.core.engine import available_backends, resolve_engine
 from repro.kernels import ops
 from repro.kernels.ops import default_interpret as ops_default_interpret
+from repro.optim import quantization as qz
 
 JSON_PATH = os.environ.get("BENCH_BACKENDS_JSON", "BENCH_backends.json")
 
@@ -184,9 +185,50 @@ def run():
          f"vs_mask={t_mask / t_sorted:.2f}x")
     emit("backends/tile_write_through(mask)", t_mask)
 
+    # Int8 quantized tables (optim/quantization.py): the affordability rows.
+    # table_bytes counts the *served* layout (int8 payload + per-row fp32
+    # scales); carry_bytes adds the error-feedback residual the training
+    # carry holds.  The bytes ratio is exact arithmetic on shapes; the
+    # steps/s ratio contrasts the same engine on fp32 vs int8 tables.
+    fp32_ref_us = _time_engine(cfg, resolve_engine(cfg, backend="fused"))
+    q_state = mf.init_mf(jax.random.PRNGKey(0),
+                         _bench_cfg(table_format="int8"))
+    f_state = mf.init_mf(jax.random.PRNGKey(0), cfg)
+    table_bytes = (qz.table_nbytes(q_state.params.user_table)
+                   + qz.table_nbytes(q_state.params.item_table))
+    fp32_table_bytes = (qz.table_nbytes(f_state.params.user_table)
+                        + qz.table_nbytes(f_state.params.item_table))
+    carry_bytes = (qz.carry_nbytes(q_state.params.user_table)
+                   + qz.carry_nbytes(q_state.params.item_table))
+    bytes_ratio = table_bytes / fp32_table_bytes
+    del q_state, f_state
+    for backend in ("fused", "pallas"):
+        qcfg = _bench_cfg(table_format="int8")
+        us = _time_engine(qcfg, resolve_engine(qcfg, backend=backend))
+        mode = _row_mode(backend, "-", interpret)
+        derived = (f"vs_fp32={us / fp32_ref_us:.2f}x "
+                   f"bytes={bytes_ratio:.2f}x")
+        if mode == "interpret":
+            derived += " [interpret]"
+        emit(f"backends/quant/int8/{backend}", us, derived)
+        records.append({"backend": backend, "update_impl": "-",
+                        "sampler": "uniform", "layout": "quant",
+                        "table_format": "int8", "mode": mode,
+                        "us_per_call": us,
+                        "table_bytes": table_bytes,
+                        "fp32_table_bytes": fp32_table_bytes,
+                        "bytes_ratio": bytes_ratio,
+                        "carry_bytes": carry_bytes,
+                        "derived": derived})
+
     payload = {
         "batch": _BATCH,
         "row_update_launches": launch_rows,
+        "quant": {"table_format": "int8",
+                  "table_bytes": table_bytes,
+                  "fp32_table_bytes": fp32_table_bytes,
+                  "bytes_ratio": bytes_ratio,
+                  "carry_bytes": carry_bytes},
         "write_through_us": {"sorted": t_sorted, "mask": t_mask},
         "config": {"num_users": cfg.num_users, "num_items": cfg.num_items,
                    "emb_dim": cfg.emb_dim,

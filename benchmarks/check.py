@@ -36,6 +36,11 @@ write (paths overridable via ``BENCH_RUN_JSON`` / ``BENCH_BACKENDS_JSON``):
   * BENCH_backends.json has at least one ``mf``-layout and one ``head``-layout
     row for every *registered* loss backend — a partial file (a backend
     silently skipped) fails instead of shipping;
+  * BENCH_backends.json carries ``layout="quant"`` rows (the int8 table
+    matrix) with full bytes accounting and ``bytes_ratio <= 0.5`` — the
+    "table bytes halved" affordability claim, checked on the artifact;
+  * the accuracy suite, when its int8 arm is present, reports no
+    RECALL_DRIFT flag (quantized recall within 1% of the fp32 twin);
   * every BENCH_backends.json matrix row carries an execution-``mode`` label
     and pallas rows are labeled consistently with the file's
     ``pallas_interpret`` flag — interpret rows time the Pallas interpreter,
@@ -113,6 +118,17 @@ def run_problems(path: str = RUN_JSON) -> list[str]:
                        if r.get("name", "").startswith("stream/")]
         if not stream_rows:
             problems.append("streaming suite ran but emitted no stream/ rows")
+    # when-present (committed BENCH_run.json files predate the int8 arm):
+    # the accuracy suite's quantized run must stay within the 1% recall
+    # drift gate of its fp32 twin — a RECALL_DRIFT flag means int8 storage
+    # is costing accuracy, which voids the affordability trade
+    accuracy = run["suites"].get("accuracy(tab5)")
+    if accuracy is not None and accuracy["status"] == "ok":
+        drifted = [r["name"] for r in accuracy["rows"]
+                   if "RECALL_DRIFT" in r.get("derived", "")]
+        if drifted:
+            problems.append(f"accuracy rows flagged RECALL_DRIFT "
+                            f"(quantized recall off fp32 by >1%): {drifted}")
     # when-present (committed BENCH_run.json files predate the suite): the
     # resilience suite must emit its rows and none may carry a failure flag
     resilience = run["suites"].get("resilience(chaos)")
@@ -176,6 +192,36 @@ def backends_problems(path: str = BACKENDS_JSON) -> list[str]:
                 f"{who} carries an untagged speedup ratio "
                 f"({r['derived']!r}) in interpret mode — must be tagged "
                 "[interpret] and excluded from speedup claims")
+
+    # Quantized-table rows (layout="quant"): the affordability claim needs
+    # the bytes accounting in the artifact, and the served int8 layout must
+    # actually be at most half of fp32 — a bytes_ratio above 0.5 means the
+    # schema changed (or the residual leaked into the serving count) and
+    # the "table bytes halved" claim no longer holds.
+    quant_rows = [r for r in rows if r.get("layout") == "quant"]
+    if not quant_rows:
+        problems.append(
+            f"{path} has no layout='quant' rows — the int8 table matrix "
+            "(bench_backends quant section) went unmeasured")
+    for r in quant_rows:
+        who = (f"quant row backend={r.get('backend')!r} "
+               f"table_format={r.get('table_format')!r}")
+        if r.get("table_format") != "int8":
+            problems.append(f"{who}: table_format must be 'int8'")
+        for key, types in (("table_bytes", int), ("fp32_table_bytes", int),
+                           ("carry_bytes", int),
+                           ("bytes_ratio", (int, float))):
+            v = r.get(key)
+            if not _typed(v, types):
+                problems.append(f"{who}: key {key!r} has "
+                                f"{type(v).__name__} value {v!r}, "
+                                f"expected {types}")
+        ratio = r.get("bytes_ratio")
+        if isinstance(ratio, (int, float)) and not isinstance(ratio, bool) \
+                and ratio > 0.5:
+            problems.append(
+                f"{who}: bytes_ratio={ratio:.3f} > 0.5 — int8 tables must "
+                "at least halve the fp32 serving bytes")
     return problems
 
 

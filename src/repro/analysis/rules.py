@@ -108,6 +108,15 @@ RULES: dict[str, tuple[str, str]] = {
         "contract).  Clock on the host at dispatch edges and pass times "
         "in as array arguments (stream/sources.py ships event times "
         "this way)."),
+    "HL110": (
+        "public module-level def/class in src/ needs a docstring",
+        "The library surface is how the next contributor finds anything: a "
+        "public (non-underscore) module-level function or class in src/ "
+        "without a docstring is an API whose contract exists only in the "
+        "author's head — the docs/ARCHITECTURE.md layer can only point at "
+        "code that explains itself.  One line stating the contract is "
+        "enough; genuinely self-evident re-exports can carry a justified "
+        "`# heatlint: disable=HL110 -- why`."),
     "HL109": (
         "no swallowed exceptions in src/ service code",
         "An `except: pass` in service code is how degraded states go "
@@ -146,6 +155,7 @@ _DISABLE_FILE_RE = re.compile(r"#\s*heatlint:\s*disable-file=([A-Za-z0-9,\s]+?)(
 
 @dataclasses.dataclass(frozen=True)
 class Violation:
+    """One lint finding: (code, path, line, col, message)."""
     code: str
     path: str
     line: int
@@ -319,6 +329,10 @@ class ModuleLinter:
                     self._check_salted_hash(node)
             elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 self._check_jit_donation_decorator(node)
+                if in_src:
+                    self._check_public_docstring(node)
+            elif isinstance(node, ast.ClassDef) and in_src:
+                self._check_public_docstring(node)
             elif isinstance(node, (ast.For, ast.While)) and not in_tests:
                 self._check_loop_host_sync(node)
             elif isinstance(node, ast.ExceptHandler) and in_src:
@@ -518,6 +532,23 @@ class ModuleLinter:
                      "hashes are an undocumented derivation; use zlib.crc32 "
                      "or np.random.default_rng((seed, step))")
 
+    # HL110 -----------------------------------------------------------------
+
+    def _check_public_docstring(self, node) -> None:
+        """Public (non-underscore) module-level def/class in src/ must open
+        with a docstring — methods and nested/private helpers are exempt
+        (their contract lives in the enclosing docstring)."""
+        if node.name.startswith("_"):
+            return
+        if not isinstance(self._parents.get(node), ast.Module):
+            return
+        if ast.get_docstring(node) is None:
+            kind = "class" if isinstance(node, ast.ClassDef) else "function"
+            self._report("HL110", node,
+                         f"public {kind} '{node.name}' has no docstring — "
+                         "state its contract in one line (or justify with "
+                         "# heatlint: disable=HL110)")
+
     # HL109 -----------------------------------------------------------------
 
     def _check_swallowed_exception(self, handler: ast.ExceptHandler) -> None:
@@ -586,6 +617,7 @@ DEFAULT_EXCLUDES = ("tests/fixtures/heatlint",)
 
 def lint_source(source: str, path: str = "<string>",
                 relpath: Optional[str] = None) -> list[Violation]:
+    """Lint a source string; returns Violations (HL000 on syntax error)."""
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as e:
@@ -595,6 +627,7 @@ def lint_source(source: str, path: str = "<string>",
 
 
 def lint_file(path: str, root: Optional[str] = None) -> list[Violation]:
+    """Lint one file; ``root`` relativizes the path the scoped rules see."""
     with open(path, encoding="utf-8") as f:
         source = f.read()
     rel = os.path.relpath(path, root) if root else path
@@ -603,6 +636,8 @@ def lint_file(path: str, root: Optional[str] = None) -> list[Violation]:
 
 def iter_python_files(paths: Iterable[str],
                       excludes: tuple[str, ...] = DEFAULT_EXCLUDES):
+    """Yield .py files under ``paths`` — walks skip the fixture excludes,
+    explicit file arguments are always yielded."""
     for p in paths:
         if os.path.isfile(p):
             yield p         # explicit files are always linted (fixtures too)
@@ -620,6 +655,7 @@ def iter_python_files(paths: Iterable[str],
 
 def lint_paths(paths: Iterable[str], root: Optional[str] = None,
                excludes: tuple[str, ...] = DEFAULT_EXCLUDES) -> list[Violation]:
+    """Lint files/directories; returns every violation in walk order."""
     out: list[Violation] = []
     for f in iter_python_files(paths, excludes):
         out.extend(lint_file(f, root=root))

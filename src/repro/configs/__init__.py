@@ -23,5 +23,7 @@ ARCH_NAMES = list(ARCH_MODULES)
 
 
 def get_config(name: str):
+    """Import and return the named architecture's CONFIG (dash/dot names
+    normalized to module names)."""
     mod = ARCH_MODULES.get(name, name.replace("-", "_").replace(".", "p"))
     return importlib.import_module(f"repro.configs.{mod}").CONFIG

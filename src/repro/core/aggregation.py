@@ -23,12 +23,16 @@ import jax.numpy as jnp
 
 
 class AggregatorParams(NamedTuple):
+    """Learnable aggregator weights: ``w`` (K, K) plus the optional attention
+    query ``attn_q``."""
     w: jax.Array            # (K, K)
     attn_q: Optional[jax.Array] = None   # (K, K) for self/user attention
 
 
 def init_aggregator(rng: jax.Array, emb_dim: int, kind: str = "avg",
                     dtype=jnp.float32) -> AggregatorParams:
+    """Initialize AggregatorParams for ``kind`` (attention kinds get
+    ``attn_q``)."""
     k1, k2 = jax.random.split(rng)
     scale = 1.0 / jnp.sqrt(emb_dim)
     w = jax.random.normal(k1, (emb_dim, emb_dim), dtype) * scale
@@ -72,11 +76,14 @@ class AccumulatorState(NamedTuple):
 
 
 def accumulator_init(params: AggregatorParams) -> AccumulatorState:
+    """Zeroed gradient accumulator matching ``params``' structure."""
     zeros = jax.tree.map(lambda p: jnp.zeros_like(p) if p is not None else None, params)
     return AccumulatorState(grad_sum=zeros, count=jnp.zeros((), jnp.int32))
 
 
 def accumulate(state: AccumulatorState, grads: AggregatorParams) -> AccumulatorState:
+    """Fold one gradient contribution into the accumulator (the deferred §4.5
+    flush)."""
     new_sum = jax.tree.map(lambda a, g: a + g if a is not None else None,
                            state.grad_sum, grads)
     return AccumulatorState(grad_sum=new_sum, count=state.count + 1)

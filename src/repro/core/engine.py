@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.core import samplers
 from repro.core.tiling import concat_groups
+from repro.optim import quantization as qz
 from repro.core.losses import (
     ccl_loss_autodiff,
     ccl_loss_fused,
@@ -80,6 +81,7 @@ SAMPLERS: dict[str, "NegativeSampler"] = {}
 
 
 def register_loss(name: str):
+    """Decorator: register a LossFn under ``name`` in LOSS_IMPLS."""
     def deco(fn: LossFn) -> LossFn:
         LOSS_IMPLS[name] = fn
         return fn
@@ -87,6 +89,7 @@ def register_loss(name: str):
 
 
 def register_update(name: str):
+    """Decorator: register an UpdateFn under ``name`` in UPDATE_IMPLS."""
     def deco(fn: UpdateFn) -> UpdateFn:
         UPDATE_IMPLS[name] = fn
         return fn
@@ -112,7 +115,7 @@ class SampleContext(NamedTuple):
     negative embeddings participate in autodiff where the caller wants them
     to); the rest are optional capabilities a strategy can require."""
 
-    table: jax.Array                                  # (I, K)
+    table: qz.Table                                   # (I, K) — fp32 or int8
     tile: Optional[samplers.TileState] = None         # §4.2 resident tile
     pos_ids: Optional[jax.Array] = None               # batch positives
     weights: Optional[jax.Array] = None               # (I,) popularity weights
@@ -159,8 +162,8 @@ class UniformSampler:
     name = "uniform"
 
     def sample(self, state, rng, shape):
-        ids = samplers.sample_uniform(rng, state.table.shape[0], shape)
-        return NegSample(ids, state.table[ids], state)
+        ids = samplers.sample_uniform(rng, qz.num_rows(state.table), shape)
+        return NegSample(ids, qz.gather_rows(state.table, ids), state)
 
 
 @register_sampler("tile")
@@ -185,7 +188,8 @@ class TileSampler:
         local = jax.random.randint(rng, shape, 0, tile.tile_ids.shape[0],
                                    dtype=jnp.int32)
         ids = tile.tile_ids[local]
-        embs = state.table[ids] if tile.tile_emb is None else tile.tile_emb[local]
+        embs = (qz.gather_rows(state.table, ids) if tile.tile_emb is None
+                else tile.tile_emb[local])
         return NegSample(ids, embs, state, local_idx=local)
 
 
@@ -226,7 +230,7 @@ class PopularitySampler:
     name = "popularity"
 
     def sample(self, state, rng, shape):
-        num = state.table.shape[0]
+        num = qz.num_rows(state.table)
         if state.weights is not None:
             ids = jax.random.categorical(rng, popularity_logits(state.weights),
                                          shape=shape)
@@ -236,7 +240,7 @@ class PopularitySampler:
             ids = jnp.floor(jnp.exp(u * jnp.log(float(num + 1)))).astype(
                 jnp.int32) - 1
             ids = jnp.clip(ids, 0, num - 1)
-        return NegSample(ids, state.table[ids], state)
+        return NegSample(ids, qz.gather_rows(state.table, ids), state)
 
 
 @register_sampler("in_batch")
@@ -267,7 +271,7 @@ class InBatchSampler:
         else:
             j = jax.random.randint(rng, shape, 0, b, dtype=jnp.int32)
         ids = pos[j]
-        return NegSample(ids, state.table[ids], state)
+        return NegSample(ids, qz.gather_rows(state.table, ids), state)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -445,6 +449,10 @@ def resolve_engine(cfg=None, *, backend: Optional[str] = None,
     if sampler not in SAMPLERS:
         raise ValueError(f"unknown sampler {sampler!r}; "
                          f"available: {sorted(SAMPLERS)}")
+    table_format = getattr(cfg, "table_format", None) or "fp32"
+    if table_format not in qz.TABLE_FORMATS:
+        raise ValueError(f"unknown table_format {table_format!r}; "
+                         f"available: {list(qz.TABLE_FORMATS)}")
     if backend == "pallas" and getattr(cfg, "similarity", "cosine") != "cosine":
         raise ValueError(
             "backend='pallas' implements cosine similarity only "

@@ -42,6 +42,7 @@ from repro.core.engine import SampleContext, StepEngine, resolve_engine
 
 
 class HeatHeadConfig(NamedTuple):
+    """CCL head knobs for the LM vocab head (negatives, margins, tile sizes)."""
     num_negatives: int = 64
     mu: float = 1.0
     theta: float = 0.0

@@ -39,6 +39,8 @@ def ndcg_at_k(topk_ids: jax.Array, test_mask: jax.Array) -> jax.Array:
 
 def evaluate_ranking(scores: jax.Array, train_mask: jax.Array, test_mask: jax.Array,
                      k: int = 20) -> dict[str, jax.Array]:
+    """Recall@k / NDCG@k from a (U, I) score matrix, excluding train
+    positives."""
     ids = topk_exclude_train(scores, train_mask, k)
     return {f"recall@{k}": recall_at_k(ids, test_mask),
             f"ndcg@{k}": ndcg_at_k(ids, test_mask)}

@@ -24,10 +24,17 @@ from repro.core import aggregation as agg
 from repro.core import samplers
 from repro.core.engine import SampleContext, StepEngine, resolve_engine
 from repro.distributed import sharding as shd
+from repro.optim import quantization as qz
 
 
 @dataclasses.dataclass(frozen=True)
 class MFConfig:
+    """Model + execution config for the HEAT MF-CF trainer (one frozen
+    dataclass so it is hashable / jit-static).  ``table_format`` picks the
+    embedding storage layout: ``fp32`` (plain arrays) or ``int8``
+    (:class:`repro.optim.quantization.QuantizedTable` — per-row absmax
+    scales, stochastic-rounded updates, error-feedback residual)."""
+
     num_users: int
     num_items: int
     emb_dim: int = 128
@@ -53,15 +60,27 @@ class MFConfig:
     init: str = "normal"           # "normal" | "xavier"
     init_std: float = 0.1
     dtype: str = "float32"
+    # Embedding storage layout: "fp32" (plain arrays) or "int8" (quantized
+    # tables — optim/quantization.py).  Orthogonal to backend/update_impl:
+    # the int8 row updates replace the engine's row-update impl, everything
+    # else (loss, sampler, tile) is layout-polymorphic.
+    table_format: str = "fp32"
 
 
 class MFParams(NamedTuple):
-    user_table: jax.Array                          # (U, K)
-    item_table: jax.Array                          # (I, K)
+    """The trainable parameters: user/item tables (plain ``(R, K)`` arrays
+    under ``table_format='fp32'``, :class:`~repro.optim.quantization.
+    QuantizedTable` pytrees under ``'int8'``) + the optional aggregator."""
+
+    user_table: qz.Table                           # (U, K)
+    item_table: qz.Table                           # (I, K)
     aggregator: Optional[agg.AggregatorParams]     # None when history_len == 0
 
 
 class MFState(NamedTuple):
+    """Full training carry (donated through scan windows): params, the §4.2
+    resident tile, the deferred-aggregator accumulator, and the step."""
+
     params: MFParams
     tile: Optional[samplers.TileState]
     accum: Optional[agg.AccumulatorState]
@@ -69,6 +88,11 @@ class MFState(NamedTuple):
 
 
 def init_mf(rng: jax.Array, cfg: MFConfig) -> MFState:
+    """Initialize an :class:`MFState` from the config (quantizing the fresh
+    tables when ``cfg.table_format == 'int8'``)."""
+    if cfg.table_format not in qz.TABLE_FORMATS:
+        raise ValueError(f"unknown table_format {cfg.table_format!r}; "
+                         f"available: {list(qz.TABLE_FORMATS)}")
     ku, ki, ka, kt = jax.random.split(rng, 4)
     dtype = jnp.dtype(cfg.dtype)
     if cfg.init == "xavier":
@@ -76,9 +100,13 @@ def init_mf(rng: jax.Array, cfg: MFConfig) -> MFState:
         si = jnp.sqrt(2.0 / (cfg.num_items + cfg.emb_dim))
     else:
         su = si = cfg.init_std
+    user_t = jax.random.normal(ku, (cfg.num_users, cfg.emb_dim), dtype) * su
+    item_t = jax.random.normal(ki, (cfg.num_items, cfg.emb_dim), dtype) * si
+    if cfg.table_format == "int8":
+        user_t, item_t = qz.quantize_table(user_t), qz.quantize_table(item_t)
     params = MFParams(
-        user_table=jax.random.normal(ku, (cfg.num_users, cfg.emb_dim), dtype) * su,
-        item_table=jax.random.normal(ki, (cfg.num_items, cfg.emb_dim), dtype) * si,
+        user_table=user_t,
+        item_table=item_t,
         aggregator=(agg.init_aggregator(ka, cfg.emb_dim, cfg.aggregation_kind, dtype)
                     if cfg.history_len > 0 else None),
     )
@@ -91,6 +119,8 @@ def init_mf(rng: jax.Array, cfg: MFConfig) -> MFState:
 
 
 class Batch(NamedTuple):
+    """One training mini-batch of implicit-feedback interactions."""
+
     user_ids: jax.Array                 # (B,)
     pos_ids: jax.Array                  # (B,)
     hist_ids: Optional[jax.Array] = None   # (B, H)
@@ -124,9 +154,18 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
         engine = resolve_engine(cfg)
     params, tile = state.params, state.tile
     r_neg, r_tile = jax.random.split(rng)
+    # Int8 layout: gathered rows are dequantized (inside the Pallas kernel on
+    # the pallas backend, as a fused gather-multiply otherwise) and the row
+    # updates requantize with stochastic rounding.  The rounding keys derive
+    # from the step rng by fold_in with fixed salts — NOT by widening the
+    # split above, which would perturb every existing fp32 trajectory.
+    quantized = isinstance(params.user_table, qz.QuantizedTable)
+    in_kernel = quantized and engine.backend == "pallas"
 
-    user_e = params.user_table[batch.user_ids]
-    pos_e = params.item_table[batch.pos_ids]
+    user_e = qz.gather_rows(params.user_table, batch.user_ids,
+                            use_kernel=in_kernel)
+    pos_e = qz.gather_rows(params.item_table, batch.pos_ids,
+                           use_kernel=in_kernel)
     n_shape = (batch.user_ids.shape[0], cfg.num_negatives)
 
     # Negative draw through the engine's sampler protocol: the context hands
@@ -144,7 +183,8 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
 
     hist_e = hist_mask = None
     if params.aggregator is not None:
-        hist_e = params.item_table[batch.hist_ids]
+        hist_e = qz.gather_rows(params.item_table, batch.hist_ids,
+                                use_kernel=in_kernel)
         hist_mask = batch.hist_mask.astype(user_e.dtype)
 
     def loss_fn(u, p, n, h, a):
@@ -188,7 +228,12 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
     # *larger* than the sample (big N1, small batch) the reduction would
     # inflate the table write from B*n to N1 rows, so the per-sample scatter
     # path stays (shapes are static — the branch resolves at trace time).
-    new_user = engine.row_update(params.user_table, ids_user, g_user, cfg.lr)
+    if quantized:
+        new_user = qz.apply_updates(params.user_table, ids_user, g_user,
+                                    cfg.lr, jax.random.fold_in(rng, 1))
+    else:
+        new_user = engine.row_update(params.user_table, ids_user, g_user,
+                                     cfg.lr)
     neg_reduced = None
     item_groups = [(ids_pos, g_pos)]
     if neg_local is not None and tile.tile_ids.shape[0] <= neg_local.size:
@@ -199,7 +244,12 @@ def heat_train_step(state: MFState, batch: Batch, rng: jax.Array, cfg: MFConfig,
         item_groups.append((neg_ids, g_neg))
     if params.aggregator is not None:
         item_groups.append((ids_hist, g_hist))
-    new_item = engine.row_update_many(params.item_table, item_groups, cfg.lr)
+    if quantized:
+        new_item = qz.apply_updates_many(params.item_table, item_groups,
+                                         cfg.lr, jax.random.fold_in(rng, 2))
+    else:
+        new_item = engine.row_update_many(params.item_table, item_groups,
+                                          cfg.lr)
 
     # Tile coherence: write the same updates through to the replicated copy
     # (slot-reduced negatives as a dense add, small tile-sourced samples by
@@ -281,12 +331,14 @@ def scores_all_items(params: MFParams, user_ids: jax.Array,
     temporaries); the result is still (B, I) — use :func:`topk_all_items`
     when only a top-k is needed and (B, I) must never exist at once.
     """
-    u = params.user_table[user_ids]
+    u = qz.gather_rows(params.user_table, user_ids)
     t = params.item_table
-    if not item_chunk or item_chunk >= t.shape[0]:
-        return _score_item_block(u, t, similarity)
-    blocks = [_score_item_block(u, t[s:s + item_chunk], similarity)
-              for s in range(0, t.shape[0], item_chunk)]
+    n = qz.num_rows(t)
+    if not item_chunk or item_chunk >= n:
+        return _score_item_block(u, qz.dequantize_table(t), similarity)
+    blocks = [_score_item_block(u, qz.slice_rows(t, s, s + item_chunk),
+                                similarity)
+              for s in range(0, n, item_chunk)]
     return jnp.concatenate(blocks, axis=1)
 
 
@@ -306,20 +358,20 @@ def topk_all_items(params: MFParams, user_ids: jax.Array, k: int, *,
     but never duplicated).  ``k > num_items`` is clamped: the result is
     (B, min(k, I)) — every item ranked, no phantom ids.
     """
-    u = params.user_table[user_ids]
+    u = qz.gather_rows(params.user_table, user_ids)
     t = params.item_table
-    num_items = t.shape[0]
+    num_items = qz.num_rows(t)
     k = min(int(k), num_items)
     c = item_chunk or num_items
     if c >= num_items:
-        sc = _score_item_block(u, t, similarity)
+        sc = _score_item_block(u, qz.dequantize_table(t), similarity)
         if exclude_mask is not None:
             sc = jnp.where(exclude_mask, -jnp.inf, sc)
         return jax.lax.top_k(sc, k)[1]
 
     num_chunks = -(-num_items // c)
     pad = num_chunks * c - num_items
-    t_p = jnp.pad(t, ((0, pad), (0, 0)))
+    t_p = qz.pad_rows(t, pad)
     mask_p = (jnp.pad(exclude_mask, ((0, 0), (0, pad)), constant_values=True)
               if exclude_mask is not None else None)
     b = u.shape[0]
@@ -327,7 +379,7 @@ def topk_all_items(params: MFParams, user_ids: jax.Array, k: int, *,
     def body(i, carry):
         best_s, best_i = carry
         s0 = i * c
-        block = jax.lax.dynamic_slice_in_dim(t_p, s0, c, axis=0)
+        block = qz.dynamic_slice_rows(t_p, s0, c)
         sc = _score_item_block(u, block, similarity)
         ids = s0 + jnp.arange(c, dtype=jnp.int32)
         dead = ids[None, :] >= num_items                 # padding rows

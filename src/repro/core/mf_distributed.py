@@ -68,6 +68,11 @@ def _has_attn_q(cfg: mf.MFConfig) -> bool:
 
 def state_specs(cfg: mf.MFConfig, mesh: Mesh) -> mf.MFState:
     """PartitionSpec tree mirroring MFState (fit to the mesh)."""
+    if getattr(cfg, "table_format", "fp32") != "fp32":
+        raise NotImplementedError(
+            "sharded execution supports table_format='fp32' only; int8 "
+            "tables (optim/quantization.py) train single-device — sharding "
+            "the (q, scale, err) leaves is an open ROADMAP item")
     ms = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp = ("pod", "data")
     user = fit_spec((cfg.num_users, cfg.emb_dim), P(dp, None), ms)
@@ -103,6 +108,7 @@ def abstract_state(cfg: mf.MFConfig, dtype=jnp.float32) -> mf.MFState:
 
 
 def abstract_batch(cfg: mf.MFConfig, global_batch: int) -> mf.Batch:
+    """ShapeDtypeStruct skeleton of a global batch (lowering without data)."""
     sds = jax.ShapeDtypeStruct
     hist = cfg.history_len
     return mf.Batch(
@@ -113,6 +119,7 @@ def abstract_batch(cfg: mf.MFConfig, global_batch: int) -> mf.Batch:
 
 
 def batch_specs(cfg: mf.MFConfig, mesh: Mesh, global_batch: int) -> mf.Batch:
+    """Batch pytree of NamedShardings pinning a global batch to the data axes."""
     ms = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp = ("pod", "data")
     vec = fit_spec((global_batch,), P(dp), ms)

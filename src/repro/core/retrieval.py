@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mf
+from repro.optim import quantization as qz
 
 
 class RetrievalIndex(NamedTuple):
@@ -75,7 +76,7 @@ def _normalize(x: jax.Array, axis: int = -1) -> jax.Array:
     return x / jnp.linalg.norm(x, axis=axis, keepdims=True).clip(1e-12)
 
 
-def refresh_index(index: RetrievalIndex, item_table: jax.Array, *,
+def refresh_index(index: RetrievalIndex, item_table: qz.Table, *,
                   similarity: str = "cosine") -> RetrievalIndex:
     """Recompute centroids from the *live* table under the existing member
     partition — the online-serving refresh path.
@@ -90,7 +91,7 @@ def refresh_index(index: RetrievalIndex, item_table: jax.Array, *,
     """
     ids = index.member_ids
     valid = (ids >= 0)
-    rows = item_table[jnp.maximum(ids, 0)]                    # (T, R, K)
+    rows = qz.gather_rows(item_table, jnp.maximum(ids, 0))    # (T, R, K)
     if similarity == "cosine":
         rows = _normalize(rows)
     rows = rows * valid[..., None].astype(rows.dtype)
@@ -98,7 +99,7 @@ def refresh_index(index: RetrievalIndex, item_table: jax.Array, *,
     cent = rows.sum(axis=1) / counts[:, None]
     if similarity == "cosine":
         cent = _normalize(cent)
-    return index._replace(centroids=cent.astype(item_table.dtype))
+    return index._replace(centroids=cent.astype(qz.logical_dtype(item_table)))
 
 
 def build_retrieval_index(item_table, *, tile_rows: int = 512,
@@ -116,7 +117,7 @@ def build_retrieval_index(item_table, *, tile_rows: int = 512,
     also the online refresh path — build and refresh can never disagree
     about what a centroid means.
     """
-    table = np.asarray(item_table, np.float32)
+    table = np.asarray(qz.dequantize_table(item_table), np.float32)
     num_items, _ = table.shape
     if tile_rows < 1:
         raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
@@ -147,9 +148,8 @@ def build_retrieval_index(item_table, *, tile_rows: int = 512,
     member_ids = jnp.asarray(padded.reshape(num_tiles, tile_rows))
     index = RetrievalIndex(member_ids=member_ids,
                            centroids=jnp.zeros((num_tiles, table.shape[1]),
-                                               item_table.dtype))
-    return refresh_index(index, jnp.asarray(item_table),
-                         similarity=similarity)
+                                               qz.logical_dtype(item_table)))
+    return refresh_index(index, item_table, similarity=similarity)
 
 
 def topk_pruned(params: mf.MFParams, user_ids: jax.Array, k: int,
@@ -172,7 +172,7 @@ def topk_pruned(params: mf.MFParams, user_ids: jax.Array, k: int,
     if expand_tiles < 1:
         raise ValueError(f"expand_tiles must be >= 1, got {expand_tiles}")
     expand = min(int(expand_tiles), index.num_tiles)
-    u = params.user_table[user_ids]                              # (B, K)
+    u = qz.gather_rows(params.user_table, user_ids)              # (B, K)
 
     # Stage 1 — coarse: score one centroid per tile.  Centroids are already
     # unit-norm under cosine, so plain dot against the normalized user ranks
@@ -186,7 +186,7 @@ def topk_pruned(params: mf.MFParams, user_ids: jax.Array, k: int,
     cand = cand.reshape(cand.shape[0], -1)                       # (B, C)
     dead = cand < 0
     safe = jnp.where(dead, 0, cand)
-    cand_e = params.item_table[safe]                             # (B, C, K)
+    cand_e = qz.gather_rows(params.item_table, safe)             # (B, C, K)
     scores = jnp.einsum("bk,bck->bc", u, cand_e)
     if similarity == "cosine":
         un = jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-12)

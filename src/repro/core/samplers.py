@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tiling
+from repro.optim import quantization as qz
 
 
 def sample_uniform(rng: jax.Array, num_items: int, shape: tuple[int, ...]) -> jax.Array:
@@ -58,9 +59,13 @@ class TileState(NamedTuple):
     step: jax.Array                  # () int32 — iterations since last refresh
 
 
-def tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int) -> TileState:
-    ids = sample_unique(rng, item_table.shape[0], tile_size)
-    return TileState(tile_ids=ids, tile_emb=item_table[ids], step=jnp.zeros((), jnp.int32))
+def tile_init(rng: jax.Array, item_table: qz.Table, tile_size: int) -> TileState:
+    """Draw the initial resident tile (distinct sorted ids + their rows).
+    The tile copy is always fp32: with an int8 backing table the gathered
+    rows are dequantized into the tile (quantization.gather_rows)."""
+    ids = sample_unique(rng, qz.num_rows(item_table), tile_size)
+    return TileState(tile_ids=ids, tile_emb=qz.gather_rows(item_table, ids),
+                     step=jnp.zeros((), jnp.int32))
 
 
 def id_tile_init(rng: jax.Array, num_items: int, tile_size: int) -> TileState:
@@ -69,7 +74,7 @@ def id_tile_init(rng: jax.Array, num_items: int, tile_size: int) -> TileState:
                      tile_emb=None, step=jnp.zeros((), jnp.int32))
 
 
-def tile_refresh(state: TileState, rng: jax.Array, item_table: jax.Array,
+def tile_refresh(state: TileState, rng: jax.Array, item_table: qz.Table,
                  refresh_interval: int) -> TileState:
     """Refresh the cached tile every ``refresh_interval`` steps (lax.cond).
 
@@ -77,8 +82,8 @@ def tile_refresh(state: TileState, rng: jax.Array, item_table: jax.Array,
     ``item_table`` then contributes just the sampling-space size."""
 
     def do_refresh(s: TileState) -> TileState:
-        ids = sample_unique(rng, item_table.shape[0], s.tile_ids.shape[0])
-        emb = None if s.tile_emb is None else item_table[ids]
+        ids = sample_unique(rng, qz.num_rows(item_table), s.tile_ids.shape[0])
+        emb = None if s.tile_emb is None else qz.gather_rows(item_table, ids)
         return TileState(tile_ids=ids, tile_emb=emb,
                          step=jnp.zeros((), jnp.int32))
 
@@ -203,6 +208,8 @@ def _sharded_unique_ids(rng: jax.Array, num_items: int, num_shards: int,
 
 def sharded_tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int,
                       num_shards: int) -> ShardedTileState:
+    """Per-shard tile init: disjoint id strata so each model shard caches its
+    own tile rows (fp32 tables only)."""
     ids = _sharded_unique_ids(rng, item_table.shape[0], num_shards, tile_size)
     return ShardedTileState(tile_ids=ids, tile_emb=item_table[ids],
                             step=jnp.zeros((), jnp.int32))
@@ -210,6 +217,8 @@ def sharded_tile_init(rng: jax.Array, item_table: jax.Array, tile_size: int,
 
 def sharded_tile_refresh(state: ShardedTileState, rng: jax.Array, item_table: jax.Array,
                          refresh_interval: int) -> ShardedTileState:
+    """Interval-gated re-draw of every shard's tile ids/rows (fp32 tables
+    only)."""
     def do_refresh(s):
         ids = _sharded_unique_ids(rng, item_table.shape[0],
                                   s.tile_ids.shape[0], s.tile_ids.shape[1])

@@ -98,6 +98,7 @@ def cosine_from_stats(res: SimilarityResiduals) -> tuple[jax.Array, jax.Array]:
 
 
 def dot_from_stats(res: SimilarityResiduals) -> tuple[jax.Array, jax.Array]:
+    """The (user-pos, user-neg) dot products out of cached residuals."""
     return res.up, res.un
 
 

@@ -101,6 +101,7 @@ class HardwareModel:
 
 @dataclasses.dataclass(frozen=True)
 class TilingPlan:
+    """Chosen (N1, N2) tile/refresh sizes with the model's predicted speedup."""
     tile_size: int            # N1
     refresh_interval: int     # N2
     predicted_speedup: float  # on the negative-read term

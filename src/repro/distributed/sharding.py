@@ -28,16 +28,19 @@ MODEL_AXIS = "model"
 
 
 def set_mesh(mesh: Optional[Mesh]):
+    """Install ``mesh`` as the process-global active mesh (None clears it)."""
     global _MESH
     _MESH = mesh
 
 
 def get_mesh() -> Optional[Mesh]:
+    """The active mesh, or None when running single-device."""
     return _MESH
 
 
 @contextlib.contextmanager
 def use_mesh(mesh: Optional[Mesh]):
+    """Context manager: install ``mesh`` for the block, restore on exit."""
     prev = _MESH
     set_mesh(mesh)
     try:
@@ -62,6 +65,7 @@ def shard_map(f, mesh: Mesh, in_specs, out_specs, check: bool = False):
 
 
 def mesh_axes() -> frozenset[str]:
+    """Axis names of the active mesh (empty frozenset when none)."""
     return frozenset(_MESH.axis_names) if _MESH is not None else frozenset()
 
 
@@ -112,6 +116,7 @@ def replicated(x: jax.Array) -> jax.Array:
 
 
 def named(spec: P) -> Optional[NamedSharding]:
+    """NamedSharding of ``spec`` on the active mesh, or None without one."""
     if _MESH is None:
         return None
     return NamedSharding(_MESH, resolve(spec))
@@ -133,6 +138,7 @@ def active_mesh() -> Optional[Mesh]:
 
 
 def data_shards() -> int:
+    """Product of the data-parallel axis sizes of the active mesh."""
     if _MESH is None:
         return 1
     n = 1
@@ -143,6 +149,7 @@ def data_shards() -> int:
 
 
 def model_shards() -> int:
+    """Size of the model axis of the active mesh (1 when absent)."""
     if _MESH is None or MODEL_AXIS not in _MESH.axis_names:
         return 1
     return _MESH.shape[MODEL_AXIS]

@@ -34,8 +34,47 @@ def launch_count() -> int:
 
 
 def reset_launch_count() -> None:
+    """Zero the trace-time pallas_call launch counter."""
     global _LAUNCHES
     _LAUNCHES = 0
+
+
+def _gather_dequant_kernel(ids_ref, q_ref, scale_ref, out_ref):
+    """out[i] = q[ids[i]].astype(f32) * scale[ids[i]] for the current row."""
+    del ids_ref  # consumed by the BlockSpec index_map (scalar prefetch)
+    out_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+
+
+def gather_dequant_rows(q: jax.Array, scale: jax.Array, ids: jax.Array, *,
+                        interpret: bool = False) -> jax.Array:
+    """Gather + dequantize int8 rows in-kernel: returns fp32 ``q[ids] *
+    scale[ids]`` for ids (B,).
+
+    Same scalar-prefetch structure as :func:`gather_fma_rows`: the ids land
+    in SMEM before the grid runs and each grid step's BlockSpec streams
+    exactly one int8 row (and its (1, 1) scale) HBM->VMEM, multiplying them
+    inside the kernel — the fp32 table never exists, only the (B, K) gathered
+    block does.  q: (R, K) int8, scale: (R, 1) fp32.
+    """
+    global _LAUNCHES
+    _LAUNCHES += 1
+    b = ids.shape[0]
+    k = q.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i, ids: (ids[i], 0)),   # one int8 row
+            pl.BlockSpec((1, 1), lambda i, ids: (ids[i], 0)),   # its scale
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), q, scale)
 
 
 def _gather_fma_kernel(ids_ref, table_ref, grad_ref, lr_ref, out_ref):

@@ -31,6 +31,7 @@ EPS = 1e-12
 
 
 def default_interpret() -> bool:
+    """True when Pallas must run interpreted (no TPU backend present)."""
     return jax.default_backend() != "tpu"
 
 
@@ -210,6 +211,8 @@ def fused_rows_update(table: jax.Array, groups, lr, *, use_kernel: bool = True,
 def attention(q, k, v, *, causal: bool = True, use_kernel: bool = True,
               block_q: int = 128, block_k: int = 128,
               interpret: bool | None = None):
+    """Tiled attention via the Pallas kernel, or the jnp reference when
+    ``use_kernel=False``."""
     if not use_kernel:
         return ref.attention_ref(q, k, v, causal=causal)
     interp = default_interpret() if interpret is None else interpret

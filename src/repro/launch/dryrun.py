@@ -159,6 +159,8 @@ def lower_mf_cell(shape_name: str, mesh, *, users=None, items=None):
 
 
 def run(args) -> int:
+    """Lower + memory-audit the selected arches over the production meshes;
+    returns a process exit code."""
     meshes = []
     if args.mesh in ("single", "both"):
         meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
@@ -240,6 +242,7 @@ def run(args) -> int:
 
 
 def main():
+    """CLI entry: parse args and run the dry-run audit."""
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default=None)
     p.add_argument("--shape", default=None)

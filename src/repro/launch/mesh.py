@@ -15,6 +15,7 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The (16, 16) production mesh — or the (2, 16, 16) multi-pod variant."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     ndev = math.prod(shape)

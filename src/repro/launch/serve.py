@@ -134,6 +134,7 @@ def serve_mf(args) -> None:
 
 
 def main():
+    """CLI entry for the batching recommendation server demo."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--reduced", action="store_true", default=True)

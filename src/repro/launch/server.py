@@ -36,6 +36,7 @@ import numpy as np
 from repro.analysis.sanitize import TraceCounter
 from repro.core import mf
 from repro.core import retrieval as rtv
+from repro.optim import quantization as qz
 
 
 class _Request(NamedTuple):
@@ -107,12 +108,12 @@ class BatchingRecommender:
 
         self._fn = jax.jit(self.trace_counter.wrap(_recommend))
         self._params = state.params
-        # the compiled program is shape/dtype-keyed: a refresh that changed
-        # either would retrace (or serve garbage), so pin the spec now and
+        # the compiled program is shape/dtype/layout-keyed: a refresh that
+        # changed any (including an fp32 <-> int8 table-format swap) would
+        # retrace (or serve garbage), so pin the leaf-level spec now and
         # reject non-conforming refreshes instead of degrading silently
-        self._table_specs = tuple(
-            (tuple(t.shape), jnp.dtype(t.dtype))
-            for t in (state.params.user_table, state.params.item_table))
+        self._table_specs = qz.table_spec(
+            (state.params.user_table, state.params.item_table))
         self._index = (rtv.refresh_index(index, state.params.item_table,
                                          similarity=similarity)
                        if (index is not None and refresh_centroids)
@@ -231,15 +232,13 @@ class BatchingRecommender:
 
     def _validate_refresh(self, state: mf.MFState) -> None:
         params = state.params
-        for t, (shape, dtype), label in zip(
-                (params.user_table, params.item_table),
-                self._table_specs, ("user", "item")):
-            got = (tuple(t.shape), jnp.dtype(t.dtype))
-            if got != (shape, dtype):
-                raise ValueError(
-                    f"refresh {label} table is {got[0]}/{got[1]}, the "
-                    f"serving program was compiled for {shape}/{dtype} — "
-                    "refusing the swap (it would retrace or serve garbage)")
+        got = qz.table_spec((params.user_table, params.item_table))
+        if got != self._table_specs:
+            raise ValueError(
+                f"refresh tables have shape/dtype/layout {got[1]} "
+                f"({got[0]}), the serving program was compiled for "
+                f"{self._table_specs[1]} ({self._table_specs[0]}) — "
+                "refusing the swap (it would retrace or serve garbage)")
 
     def refresh_from(self, state: mf.MFState, *,
                      on_error: str = "degrade") -> bool:

@@ -48,6 +48,8 @@ def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
 
 
 def tile_abstract(cfg: ArchConfig):
+    """Abstract id-only tile state for the configured tile size, or (None,
+    None) when tiling is off."""
     if not (cfg.heat.enabled and cfg.heat.tile_size):
         return None, None
     # Id-only vocab tile (samplers.TileState with tile_emb=None).

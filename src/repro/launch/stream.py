@@ -25,6 +25,7 @@ import time
 
 
 def main(argv=None) -> None:
+    """CLI entry for the streaming ingest -> train -> serve loop."""
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--users", type=int, default=1000)
     ap.add_argument("--items", type=int, default=2000)

@@ -16,6 +16,7 @@ import jax
 
 
 def main():
+    """CLI entry: train the LM (or the paper's CF model with --mf)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--mf", action="store_true", help="train the paper's CF model")
@@ -57,6 +58,11 @@ def main():
                              "in_batch"],
                     help="negative-sampling strategy (engine.SAMPLERS, "
                          "default: auto)")
+    ap.add_argument("--table-format", default=None,
+                    choices=["fp32", "int8"],
+                    help="MF embedding-table storage: fp32 (default) or "
+                         "int8 + per-row scales with stochastic-rounded "
+                         "updates (optim/quantization.py)")
     args = ap.parse_args()
 
     from repro.distributed import sharding as shd
@@ -77,7 +83,8 @@ def main():
                 MF_100M, num_users=2000, num_items=4000, emb_dim=64)
             overrides = {k: v for k, v in (
                 ("backend", args.backend), ("update_impl", args.update_impl),
-                ("sampler", args.sampler)) if v}
+                ("sampler", args.sampler),
+                ("table_format", args.table_format)) if v}
             if overrides:
                 cfg = dataclasses.replace(cfg, **overrides)
             engine = resolve_engine(cfg)
@@ -90,7 +97,8 @@ def main():
                 cfg, ds, steps=args.steps, batch_size=args.batch,
                 engine=engine,
                 steps_per_dispatch=args.steps_per_dispatch,
-                ckpt_dir=args.ckpt_dir, fail_at_step=args.fail_at_step)
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                fail_at_step=args.fail_at_step)
         else:
             from repro.configs import get_config
             from repro.models import lm

@@ -30,6 +30,7 @@ class HeatConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
+    """One model architecture: family, depth/width, head and HEAT knobs."""
     name: str
     family: str                    # dense | moe | ssm | hybrid | audio | vlm
     n_layers: int
@@ -131,6 +132,7 @@ class ArchConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
+    """One training shape: sequence length, global batch, parallelism."""
     name: str
     seq_len: int
     global_batch: int

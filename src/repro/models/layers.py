@@ -29,6 +29,7 @@ NEG_INF = -1e30
 # ----------------------------------------------------------------------------
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with fp32 accumulation, cast back to the input dtype."""
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
     return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
 
@@ -51,6 +52,7 @@ def mlp_defs(cfg: ArchConfig, n_layers: int) -> dict:
 
 
 def mlp_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Feed-forward block: SwiGLU or GELU per ``cfg.mlp_kind``."""
     if cfg.mlp_kind == "swiglu":
         h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
     else:
@@ -107,6 +109,7 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 # ----------------------------------------------------------------------------
 
 def attn_defs(cfg: ArchConfig, n_layers: int, prefix_dims: tuple[int, ...] = ()) -> dict:
+    """ParamDefs of the attention projections for ``n_layers`` layers."""
     d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     L = (n_layers,) if n_layers else ()
     lead = L + prefix_dims
@@ -171,6 +174,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 class KVCache(NamedTuple):
+    """Decode-time rolling K/V buffers for one attention layer group."""
     k: jax.Array        # (B, S_max, Hkv, hd)
     v: jax.Array        # (B, S_max, Hkv, hd)
 
@@ -243,6 +247,7 @@ def cross_attn_apply(p: dict, x: jax.Array, memory_kv: tuple[jax.Array, jax.Arra
 
 
 def encoder_kv(p: dict, memory: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Project encoder memory into cross-attention K/V heads."""
     k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
     return k, v

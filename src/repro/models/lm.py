@@ -96,10 +96,12 @@ def num_groups(cfg: ArchConfig) -> int:
 
 
 def layers_per_group(cfg: ArchConfig) -> int:
+    """Layers per scanned group (n_layers / num_groups)."""
     return cfg.n_layers // num_groups(cfg)
 
 
 def model_defs(cfg: ArchConfig) -> dict:
+    """The architecture's full ParamDef tree."""
     d, v = cfg.d_model, cfg.vocab
     defs: dict = {
         "embed": ParamDef((v, d), P("model", None), "normal", 0.02),
@@ -142,10 +144,12 @@ def model_defs(cfg: ArchConfig) -> dict:
 
 
 def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    """Materialize model_defs into real parameter arrays."""
     return materialize(rng, model_defs(cfg), dtype)
 
 
 def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct skeleton of model_defs (lowering / memory audits)."""
     return abstract(model_defs(cfg), dtype)
 
 
@@ -402,6 +406,7 @@ def _nones(n: int):
 # ----------------------------------------------------------------------------
 
 def embed_inputs(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Token (and VLM patch) embedding lookup, sharding-constrained."""
     h = params["embed"][batch["tokens"]]
     h = constrain(h, batch_spec(None, None))
     if cfg.family == "vlm" and "patches" in batch:
@@ -417,6 +422,8 @@ def _out_table(params: dict, cfg: ArchConfig) -> jax.Array:
 def head_loss(params: dict, h: jax.Array, labels: jax.Array, cfg: ArchConfig,
               opts: TrainOptions, rng: jax.Array,
               tile: Optional[samplers.TileState], mask=None):
+    """Output-head loss: the CCL sampled head when enabled, else full-softmax
+    cross-entropy."""
     table = _out_table(params, cfg)
     if opts.loss == "heat" and cfg.heat.enabled:
         hcfg = HeatHeadConfig(num_negatives=cfg.heat.num_negatives,
@@ -442,6 +449,7 @@ def forward_train(params: dict, batch: dict, cfg: ArchConfig, opts: TrainOptions
 
 def encode_audio(params: dict, frames: jax.Array, cfg: ArchConfig,
                  opts: TrainOptions) -> jax.Array:
+    """Audio encoder: frames -> memory rows for cross-attention."""
     b, s, _ = frames.shape
     cos, sin = rope_cos_sin(_positions(cfg, b, s), cfg.head_dim, cfg.rope_theta)
 

@@ -30,6 +30,7 @@ from repro.models.params import ParamDef
 
 
 def moe_defs(cfg: ArchConfig, n_layers: int) -> dict:
+    """ParamDefs of the router + expert stacks for ``n_layers`` MoE layers."""
     d, f, e, L = cfg.d_model, cfg.d_ff, cfg.moe_experts, n_layers
     return {
         "router": ParamDef((L, d, e), P(None, None, None), "scaled_fan_in"),

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 @dataclasses.dataclass(frozen=True)
 class ParamDef:
+    """Declarative parameter: shape, partition spec, init scheme."""
     shape: tuple[int, ...]
     spec: P = P()                 # logical partition spec
     init: str = "normal"          # normal | zeros | ones | scaled_fan_in
@@ -31,6 +32,7 @@ class ParamDef:
 
 
 def is_def(x: Any) -> bool:
+    """True when ``x`` is a ParamDef leaf."""
     return isinstance(x, ParamDef)
 
 
@@ -154,6 +156,7 @@ def fsdpify(tree, data_shards: int, axis: str = "data"):
 
 
 def count_params(tree) -> int:
+    """Total element count of a ParamDef/array tree."""
     leaves = jax.tree.leaves(tree, is_leaf=is_def)
     return sum(math.prod(l.shape) for l in leaves)
 

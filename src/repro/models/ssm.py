@@ -34,6 +34,7 @@ def _dims(cfg: ArchConfig):
 
 
 def mamba_defs(cfg: ArchConfig, n_layers: int) -> dict:
+    """ParamDefs of ``n_layers`` Mamba mixer layers."""
     d = cfg.d_model
     d_in, h, _, g, s = _dims(cfg)
     L, cw = n_layers, cfg.conv_width
@@ -120,11 +121,13 @@ def _ssd_chunked(xdt: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
 
 
 class MambaCache(NamedTuple):
+    """Decode-time Mamba state: rolling conv window + SSM state."""
     conv: jax.Array     # (B, cw-1, d_in + 2*g*s) — rolling conv inputs
     state: jax.Array    # (B, h, s, p) — SSM state
 
 
 def mamba_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> MambaCache:
+    """Zeroed MambaCache for ``batch`` decode lanes."""
     d_in, h, p, g, s = _dims(cfg)
     return MambaCache(
         conv=jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * g * s), dtype),

@@ -19,10 +19,12 @@ import jax.numpy as jnp
 
 
 class CompressionState(NamedTuple):
+    """Error-feedback residual buffer for compressed gradients."""
     error: jax.Array           # residual feedback buffer, same shape as grad
 
 
 def compression_init(grad_like: jax.Array) -> CompressionState:
+    """Zeroed CompressionState shaped like the gradient."""
     return CompressionState(jnp.zeros_like(grad_like, dtype=jnp.float32))
 
 
@@ -35,6 +37,7 @@ def quantize_int8(x: jax.Array):
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """fp32 reconstruction ``q * scale`` of an int8-quantized tensor."""
     return q.astype(jnp.float32) * scale
 
 

@@ -27,6 +27,7 @@ from repro.models.params import ParamDef, fsdpify, is_def
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
+    """Named (init, update, state_defs) bundle — the optimizer interface."""
     name: str
     init: Any                      # params -> state
     update: Any                    # (grads, state, params, lr) -> (new_p, new_s)
@@ -34,6 +35,7 @@ class Optimizer:
 
 
 class OptState(NamedTuple):
+    """Optimizer state: moment tree + () int32 step counter."""
     moments: Any                   # tree parallel to params (leaf bundles)
     count: jax.Array               # () int32 step counter
 
@@ -43,6 +45,7 @@ class OptState(NamedTuple):
 # ----------------------------------------------------------------------------
 
 def make_sgd(momentum: float = 0.0) -> Optimizer:
+    """SGD (optional momentum) as an Optimizer bundle."""
     use_m = momentum > 0.0
 
     def init(params):
@@ -73,6 +76,7 @@ def make_sgd(momentum: float = 0.0) -> Optimizer:
 # ----------------------------------------------------------------------------
 
 class AdamMoments(NamedTuple):
+    """Adam first/second moment trees."""
     mu: Any
     nu: Any
 
@@ -80,6 +84,7 @@ class AdamMoments(NamedTuple):
 def make_adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
                weight_decay: float = 0.0, zero1: bool = False,
                data_shards: int = 1, bf16_step: bool = False) -> Optimizer:
+    """AdamW (optional ZeRO-1 sharding, bf16 step) as an Optimizer."""
     def init(params):
         z = lambda p: AdamMoments(jnp.zeros(p.shape, jnp.float32),
                                   jnp.zeros(p.shape, jnp.float32))
@@ -128,6 +133,8 @@ def make_adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 # ----------------------------------------------------------------------------
 
 class FactoredMoment(NamedTuple):
+    """Adafactor's factored second moments (vr, vc), or full v for
+    non-factorable leaves."""
     vr: Optional[Any]     # row second-moment (last dim reduced)
     vc: Optional[Any]     # col second-moment (second-to-last dim reduced)
     v: Optional[Any]      # full second moment for non-factorable leaves
@@ -140,6 +147,7 @@ def _factorable(shape) -> bool:
 def make_adafactor(decay: float = 0.99, eps: float = 1e-30,
                    clip_threshold: float = 1.0,
                    bf16_step: bool = False) -> Optimizer:
+    """Adafactor (factored moments, update clipping) as an Optimizer."""
     def init(params):
         def fm(p):
             if _factorable(p.shape):
@@ -201,6 +209,7 @@ def make_adafactor(decay: float = 0.99, eps: float = 1e-30,
 
 
 def get_optimizer(name: str, **kw) -> Optimizer:
+    """Construct a registered optimizer by name."""
     if name == "sgd":
         return make_sgd(**kw)
     if name == "adamw":

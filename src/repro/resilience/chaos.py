@@ -251,6 +251,7 @@ def run_chaos(seed: int = 0, rounds: int = 10, *, num_users: int = 64,
 
 
 def main(argv=None) -> int:
+    """CLI entry: run the chaos schedule and exit non-zero on problems."""
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.sanitize import TraceCounter
+from repro.optim import quantization as qz
 
 
 class DivergenceError(RuntimeError):
@@ -56,12 +57,15 @@ GUARD_TRACES = TraceCounter("divergence_guard.stats")
 
 def _stats_impl(user_table, item_table):
     """(4,) f32 vector: [user finite, item finite, max user row norm,
-    max item row norm] — a single small readback per round."""
+    max item row norm] — a single small readback per round.  Layout-
+    polymorphic: for int8 tables the finiteness check covers the fp32
+    scales (int8 payloads cannot hold NaN) and the row norm is computed as
+    ``scale_r * ||q_r||`` without materializing the dequantized table."""
     return jnp.stack([
-        jnp.all(jnp.isfinite(user_table)).astype(jnp.float32),
-        jnp.all(jnp.isfinite(item_table)).astype(jnp.float32),
-        jnp.sqrt(jnp.max(jnp.sum(user_table * user_table, axis=-1))),
-        jnp.sqrt(jnp.max(jnp.sum(item_table * item_table, axis=-1))),
+        qz.table_all_finite(user_table).astype(jnp.float32),
+        qz.table_all_finite(item_table).astype(jnp.float32),
+        qz.max_row_norm(user_table).astype(jnp.float32),
+        qz.max_row_norm(item_table).astype(jnp.float32),
     ])
 
 

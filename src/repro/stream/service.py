@@ -129,6 +129,12 @@ class StreamingTrainer:
                  engine: Optional[StepEngine] = None,
                  recommender=None,
                  log: Callable[[str], None] = print):
+        if getattr(cfg, "table_format", "fp32") != "fp32":
+            raise NotImplementedError(
+                "streaming training supports table_format='fp32' only; the "
+                "fresh-row init path (_init_rows_jit) and poison injection "
+                "write rows in place, which int8 tables "
+                "(optim/quantization.py) do not support yet — ROADMAP item")
         self.cfg = cfg
         self.stream = stream
         self.scfg = scfg or StreamingConfig()

@@ -136,6 +136,7 @@ def _steps(ckpt_dir: str) -> list[int]:
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Highest step with a checkpoint directory, or None."""
     steps = _steps(ckpt_dir)
     return max(steps) if steps else None
 
@@ -174,6 +175,7 @@ def verify(path: str) -> list[str]:
 
 
 def verify_step(ckpt_dir: str, step: int) -> list[str]:
+    """CRC/manifest problems of one step's checkpoint (empty list = valid)."""
     return verify(os.path.join(ckpt_dir, f"step_{step:08d}"))
 
 
@@ -183,6 +185,7 @@ def valid_steps(ckpt_dir: str) -> list[int]:
 
 
 def latest_valid_step(ckpt_dir: str) -> Optional[int]:
+    """Highest step whose checkpoint passes verification, or None."""
     steps = valid_steps(ckpt_dir)
     return steps[-1] if steps else None
 

@@ -42,6 +42,7 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class TrainerConfig:
+    """LM trainer knobs (steps, lr, checkpointing, failure injection)."""
     steps: int = 100
     lr: float = 1e-3
     batch_size: int = 8
@@ -60,6 +61,7 @@ class TrainerConfig:
 
 
 class LMTrainState(NamedTuple):
+    """The LM training carry: params, optimizer state, tile, step."""
     params: Any
     opt_state: Any
     tile: Any                   # id-only samplers.TileState or None
@@ -225,6 +227,7 @@ _run_window = run_window        # internal callers predate the public name
 
 def init_lm_state(rng: jax.Array, cfg: ArchConfig, opts: lm.TrainOptions,
                   optimizer: Optimizer, dtype=jnp.float32) -> LMTrainState:
+    """Fresh LMTrainState from the arch config and optimizer."""
     kp, kt = jax.random.split(rng)
     params = lm.init_params(kp, cfg, dtype)
     tile = (samplers.id_tile_init(kt, cfg.vocab, cfg.heat.tile_size)

@@ -6,6 +6,7 @@ Intentionally bad; never executed.
 
 
 def train(step_fn, state, batches):
+    """Training loop that syncs the host every step (bad)."""
     total = 0.0
     for batch in batches:
         state, loss = step_fn(state, batch)

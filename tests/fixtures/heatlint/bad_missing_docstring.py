@@ -1,0 +1,29 @@
+"""heatlint fixture: HL110 — public module-level def/class without a
+docstring.  Only `undocumented_api` and `UndocumentedConfig` should trip:
+private helpers, methods, and nested functions are exempt."""
+
+
+def undocumented_api(x):
+    return x + 1
+
+
+class UndocumentedConfig:
+    threshold = 0.5
+
+    def method_without_docstring(self):        # methods are exempt
+        return self.threshold
+
+
+def _private_helper(x):                        # private: exempt
+    return x
+
+
+def documented(x):
+    """Has a contract — clean."""
+    def nested(y):                             # nested: exempt
+        return y
+    return nested(x)
+
+
+def justified_reexport(x):  # heatlint: disable=HL110 -- thin alias, contract documented at the target
+    return documented(x)

@@ -7,4 +7,5 @@ import numpy as np
 
 
 def batch_rng(seed, step):
+    """Seed a host RNG (badly) from a salted hash."""
     return np.random.default_rng(hash((seed, step)) % (2 ** 63))  # HL106

@@ -10,16 +10,19 @@ from jax.experimental import pallas as pl
 
 def batch_rng(seed, step):
     # documented SeedSequence derivation, not a salted hash (HL106-clean)
+    """Seeded host RNG for batch construction."""
     return np.random.default_rng((seed, step))
 
 
 def step(state, i):
     # rng derived from the traced step index, on device (HL101-clean)
+    """One scan step: add on-device uniform noise."""
     key = jax.random.fold_in(jax.random.PRNGKey(0), i)
     return state + jax.random.uniform(key, ()), jnp.float32(0.0)
 
 
 def make_window(length):
+    """Jitted, carry-donating K-step scan window."""
     def run_window(state, start):
         steps = start + jnp.arange(length, dtype=jnp.int32)
         return jax.lax.scan(step, state, steps)
@@ -28,6 +31,7 @@ def make_window(length):
 
 
 def train(window, state, num_windows):
+    """Drive windows; one bulk loss readback at the edge."""
     losses = []
     for w in range(num_windows):
         state, window_losses = window(state, jnp.asarray(w, jnp.int32))
@@ -37,10 +41,12 @@ def train(window, state, num_windows):
 
 
 def kernel(x_ref, o_ref):
+    """Identity Pallas kernel."""
     o_ref[...] = x_ref[...]
 
 
 def launch(x, rows, block):
+    """Launch the kernel over an exactly-tiled grid."""
     assert rows % block == 0, "tile size must divide"   # HL104-clean
     return pl.pallas_call(
         kernel,
@@ -51,11 +57,13 @@ def launch(x, rows, block):
 
 def run(rows):
     # every artifact row carries its execution-mode label (HL105-clean)
+    """Append a mode-labelled bench artifact row."""
     rows.append({"name": "fig6/heat", "us_per_call": 4.0, "mode": "native"})
     return rows
 
 
 def profile_loop(step_fn, state, batches):
+    """Per-step-sync profiling baseline (justified HL107)."""
     total = 0.0
     for batch in batches:
         state, loss = step_fn(state, batch)
@@ -66,6 +74,7 @@ def profile_loop(step_fn, state, batches):
 def timed_dispatch(window, state, start):
     # wall-clock on the HOST at the dispatch edge, times shipped to the
     # traced code as array arguments (HL108-clean)
+    """Time one window dispatch on the host clock."""
     import time
     t0 = time.perf_counter()
     state, losses = window(state, jnp.asarray(start, jnp.int32))
@@ -75,6 +84,7 @@ def timed_dispatch(window, state, start):
 def tolerant_refresh(server, state, log, health):
     # a handled fault is counted + logged, never silently dropped
     # (HL109-clean)
+    """Refresh the server, counting+logging failures."""
     try:
         server.refresh_from(state)
     except ValueError as e:

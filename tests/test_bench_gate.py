@@ -9,8 +9,8 @@ import json
 
 import pytest
 
-from benchmarks.check import (resilience_problems, serving_problems,
-                              streaming_problems)
+from benchmarks.check import (backends_problems, resilience_problems,
+                              serving_problems, streaming_problems)
 
 VALID = {
     "config": {"num_items": 1000, "num_users": 64, "emb_dim": 16,
@@ -340,3 +340,71 @@ def test_resilience_unknown_row_family_fails(res_artifact):
     bad["rows"][0]["name"] = "resilience/mystery"
     assert any("unrecognized row family" in p
                for p in resilience_problems(res_artifact(bad)))
+
+
+# ---------------------------------------------------------------------------
+# BENCH_backends.json quant-row gate
+# ---------------------------------------------------------------------------
+
+def _backends_payload():
+    """Minimal matrix that satisfies the completeness + mode checks: one
+    mf and one head row per registered backend, plus the quant rows."""
+    from repro.core.engine import available_backends
+    rows = []
+    for backend in available_backends()["backend"]:
+        mode = "interpret" if backend == "pallas" else "native"
+        for layout in ("mf", "head"):
+            rows.append({"backend": backend, "update_impl": "-",
+                         "sampler": "-", "layout": layout, "mode": mode,
+                         "us_per_call": 1.0, "derived": ""})
+    rows.append({"backend": "fused", "update_impl": "-",
+                 "sampler": "uniform", "layout": "quant",
+                 "table_format": "int8", "mode": "native",
+                 "us_per_call": 1.0, "table_bytes": 100,
+                 "fp32_table_bytes": 400, "bytes_ratio": 0.25,
+                 "carry_bytes": 210, "derived": "vs_fp32=1.10x bytes=0.25x"})
+    return {"pallas_interpret": True, "rows": rows}
+
+
+@pytest.fixture
+def backends_artifact(tmp_path):
+    def write(payload):
+        p = tmp_path / "BENCH_backends.json"
+        p.write_text(json.dumps(payload))
+        return str(p)
+    return write
+
+
+def test_backends_valid_artifact_passes(backends_artifact):
+    assert backends_problems(backends_artifact(_backends_payload())) == []
+
+
+def test_backends_missing_quant_rows_fail(backends_artifact):
+    bad = _backends_payload()
+    bad["rows"] = [r for r in bad["rows"] if r["layout"] != "quant"]
+    probs = backends_problems(backends_artifact(bad))
+    assert any("no layout='quant' rows" in p for p in probs)
+
+
+def test_backends_quant_bytes_ratio_gate(backends_artifact):
+    bad = _backends_payload()
+    quant = next(r for r in bad["rows"] if r["layout"] == "quant")
+    quant["bytes_ratio"] = 0.8
+    probs = backends_problems(backends_artifact(bad))
+    assert any("bytes_ratio=0.800 > 0.5" in p for p in probs)
+
+
+def test_backends_quant_missing_bytes_key_fails(backends_artifact):
+    bad = _backends_payload()
+    quant = next(r for r in bad["rows"] if r["layout"] == "quant")
+    del quant["fp32_table_bytes"]
+    probs = backends_problems(backends_artifact(bad))
+    assert any("'fp32_table_bytes'" in p for p in probs)
+
+
+def test_backends_quant_wrong_format_fails(backends_artifact):
+    bad = _backends_payload()
+    quant = next(r for r in bad["rows"] if r["layout"] == "quant")
+    quant["table_format"] = "fp16"
+    probs = backends_problems(backends_artifact(bad))
+    assert any("table_format must be 'int8'" in p for p in probs)

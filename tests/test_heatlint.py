@@ -115,12 +115,29 @@ def test_hl109_swallowed_exceptions_in_service_code():
 def test_hl109_quiet_when_the_handler_acts():
     src = textwrap.dedent("""\
         def tolerant(server, state, log):
+            \"\"\"Refresh, logging failures.\"\"\"
             try:
                 server.refresh_from(state)
             except Exception as e:  # noqa: BLE001
                 log(f"refresh failed: {e}")
     """)
     assert lint_source(src, relpath="src/repro/tolerant.py") == []
+
+
+def test_hl110_public_docstrings_in_src():
+    # path-scoped: only fires under src/
+    v = _lint_fixture("bad_missing_docstring.py",
+                      relpath="src/repro/bad_missing_docstring.py")
+    assert _codes(v) == ["HL110"]
+    # exactly the public module-level def + class: private helpers, methods,
+    # nested functions and the justified disable stay quiet
+    assert len(v) == 2
+    assert {"undocumented_api", "UndocumentedConfig"} == {
+        m.split("'")[1] for m in (x.message for x in v)}
+    assert _lint_fixture("bad_missing_docstring.py",
+                         relpath="benchmarks/bad_missing_docstring.py") == []
+    assert _lint_fixture("bad_missing_docstring.py",
+                         relpath="tests/bad_missing_docstring.py") == []
 
 
 def test_clean_fixture_is_clean_under_every_scope():

@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Docs gate — run by CI's ``docs`` job and locally:
+
+    python tools/check_docs.py                  # link / pointer check only
+    python tools/check_docs.py --run-quickstart # also execute the README quickstart
+
+Two checks, both over README.md and every ``docs/*.md``:
+
+1. **Links resolve.**  Every relative markdown link ``[text](target)`` must
+   point at a file (or ``#anchor`` within one) that exists in the repo, and
+   every inline-code *file pointer* (`` `src/repro/core/engine.py` ``-style
+   backtick paths, with an optional ``::symbol`` suffix) must name a real
+   file.  Docs rot by pointing at renamed files; this turns that rot into a
+   CI failure instead of a reader's dead end.
+
+2. **The quickstart runs** (``--run-quickstart``).  The first ``bash`` code
+   block under the README's ``## Quickstart`` heading is executed line by
+   line (skipping ``pip install`` lines — dependency setup is the CI job's
+   concern, and the gate must stay runnable in a no-network sandbox).  A
+   quickstart that errors is worse than no quickstart.
+
+Pure stdlib, exits non-zero on any problem.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — excludes images (![alt](...)) and absolute URLs.
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+#: `path/to/file.py` or `path/file.py::symbol` inside backticks.  Only
+#: paths under the repo's real top-level dirs count as pointers — config
+#: strings like `examples/quickstart.py --flag` stay excluded by the
+#: charset, bare module names by the required "/".
+_POINTER = re.compile(
+    r"`((?:src|docs|tests|benchmarks|tools|examples)/[\w./-]+\.\w+)"
+    r"(?:::[\w.]+)?`")
+#: markdown headings, for #anchor validation (github-style slugs).
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of a markdown heading."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _doc_files() -> list[str]:
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def _anchors(path: str) -> set[str]:
+    with open(path) as f:
+        return {_slug(m.group(1)) for m in _HEADING.finditer(f.read())}
+
+
+def check_links() -> list[str]:
+    """Every relative link and backtick file pointer must resolve."""
+    problems = []
+    for doc in _doc_files():
+        rel_doc = os.path.relpath(doc, REPO)
+        base = os.path.dirname(doc)
+        with open(doc) as f:
+            text = f.read()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target, _, anchor = target.partition("#")
+            dest = doc if not target else os.path.normpath(
+                os.path.join(base, target))
+            if not os.path.exists(dest):
+                problems.append(f"{rel_doc}: broken link -> {m.group(1)}")
+                continue
+            if anchor and dest.endswith(".md") \
+                    and anchor not in _anchors(dest):
+                problems.append(
+                    f"{rel_doc}: broken anchor -> {m.group(1)}")
+        for m in _POINTER.finditer(text):
+            if not os.path.exists(os.path.join(REPO, m.group(1))):
+                problems.append(
+                    f"{rel_doc}: file pointer -> `{m.group(1)}` "
+                    "does not exist")
+    return problems
+
+
+def _quickstart_lines() -> list[str]:
+    with open(os.path.join(REPO, "README.md")) as f:
+        text = f.read()
+    m = re.search(r"## Quickstart.*?```bash\n(.*?)```", text, re.DOTALL)
+    if m is None:
+        return []
+    lines = []
+    for raw in m.group(1).splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        # continuation lines were already glued below; glue them here
+        if lines and lines[-1].endswith("\\"):
+            lines[-1] = lines[-1][:-1] + " " + line
+            continue
+        lines.append(line)
+    return [ln.split("#")[0].strip() for ln in lines]
+
+
+def run_quickstart() -> list[str]:
+    """Execute the README quickstart block (minus ``pip install`` lines)."""
+    lines = _quickstart_lines()
+    if not lines:
+        return ["README.md has no ## Quickstart bash block to execute"]
+    problems = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for line in lines:
+        if line.startswith("pip install"):
+            continue
+        print(f"docs-gate: $ {line}", flush=True)
+        r = subprocess.run(line, shell=True, cwd=REPO, env=env)
+        if r.returncode != 0:
+            problems.append(
+                f"quickstart command failed (exit {r.returncode}): {line}")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry: link check always, quickstart on request."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--run-quickstart", action="store_true",
+                    help="also execute the README quickstart bash block")
+    args = ap.parse_args(argv)
+    problems = check_links()
+    if args.run_quickstart:
+        problems += run_quickstart()
+    for p in problems:
+        print(f"docs-gate: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    n = len(_doc_files())
+    print(f"docs-gate: {n} file(s) clean"
+          + (", quickstart ran" if args.run_quickstart else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
